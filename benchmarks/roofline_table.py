@@ -1,0 +1,93 @@
+"""Summarize results/dryrun/*.json into the §Dry-run and §Roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.analysis import fmt_seconds
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "jamba-1.5-large-398b", "qwen1.5-0.5b", "tinyllama-1.1b", "qwen2-72b",
+    "kimi-k2-1t-a32b", "musicgen-medium", "internvl2-26b", "falcon-mamba-7b",
+    "gemma3-1b", "deepseek-v2-236b",
+]
+
+
+def load(results_dir: str = RESULTS) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _key(r):
+    return (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99,
+            SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 9,
+            r.get("mesh", ["?"]))
+
+
+def roofline_markdown(recs: list[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | res/dev | compute | memory | collective | dominant | useful |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=_key):
+        if "error" in r or ("2x16x16" if r.get("multi_pod") else "16x16") != mesh:
+            continue
+        roof = r["roofline"]
+        res = r.get("resident_bytes_per_device", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {res:.2f}GiB "
+            f"| {fmt_seconds(roof['compute_s'])} | {fmt_seconds(roof['memory_s'])} "
+            f"| {fmt_seconds(roof['collective_s'])} | **{roof['dominant']}** "
+            f"| {roof['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def dryrun_markdown(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile_s | params | collective ops | coll bytes/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=_key):
+        mesh = "2x16x16" if r.get("multi_pod") else r.get("mesh", "16x16")
+        if isinstance(mesh, list):
+            mesh = "x".join(map(str, mesh))
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | FAIL | | | | |")
+            continue
+        c = r.get("collectives", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | OK | {r['compile_s']} "
+            f"| {r['n_params']/1e9:.1f}B | {c.get('count', 0)} "
+            f"| {c.get('total_bytes', 0):.2e} |")
+    return "\n".join(lines)
+
+
+def csv_rows(recs: list[dict]) -> list[tuple[str, str, str]]:
+    rows = []
+    for r in sorted(recs, key=_key):
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        tag = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+        if "error" in r:
+            rows.append((tag, "FAIL", r.get("error", "")[:60]))
+            continue
+        roof = r["roofline"]
+        rows.append((tag, roof["dominant"],
+                     f"compute_s={roof['compute_s']:.3e} "
+                     f"memory_s={roof['memory_s']:.3e} "
+                     f"collective_s={roof['collective_s']:.3e} "
+                     f"useful={roof['useful_ratio']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(dryrun_markdown(recs))
+    print()
+    print(roofline_markdown(recs))

@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5,...]
+
+Default (fast) mode keeps every benchmark CPU-tractable; --full uses the
+paper-scale settings where feasible.  Dry-run roofline rows are included
+when results/dryrun/*.json exist (produced by repro.launch.dryrun_all).
+"""
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    from benchmarks import paper_tables, roofline_table
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default="")
+    p.add_argument("--skip-roofline", action="store_true")
+    args = p.parse_args(argv)
+
+    names = list(paper_tables.ALL)
+    if args.only:
+        names = [n for n in names
+                 if any(tok in n for tok in args.only.split(","))]
+
+    print("name,us_per_call,derived")
+    for name in names:
+        fn = paper_tables.ALL[name]
+        t0 = time.time()
+        try:
+            rows = fn(fast=not args.full)
+        except Exception as e:  # keep the harness running
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            continue
+        for tag, val, derived in rows:
+            print(f"{tag},{val},{derived}", flush=True)
+        print(f"{name}/_wall,{(time.time()-t0)*1e6:.0f},benchmark wall time",
+              flush=True)
+
+    if not args.skip_roofline:
+        try:
+            recs = roofline_table.load()
+            for tag, val, derived in roofline_table.csv_rows(recs):
+                print(f"{tag},{val},{derived}")
+        except Exception as e:
+            print(f"roofline,ERROR,{e}")
+
+
+if __name__ == "__main__":
+    main()

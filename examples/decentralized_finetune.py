@@ -1,0 +1,68 @@
+"""End-to-end driver: decentralized SeedFlood fine-tuning of an OPT-style
+~100M-parameter model for a few hundred steps across 16 clients, with
+checkpointing and GMP evaluation — the paper's §4.2 experiment shape on
+synthetic data.
+
+    PYTHONPATH=src python examples/decentralized_finetune.py \
+        [--steps 300] [--clients 16] [--topology meshgrid] [--small]
+
+--small shrinks the model (for CPU CI); the default is the real opt-125m
+config (125M params) which takes a while on one CPU core but is the honest
+"train a ~100M model for a few hundred steps" driver.
+"""
+import argparse
+import os
+
+from repro.checkpoint import ckpt
+from repro.configs import archs
+from repro.core.messages import fmt_bytes
+from repro.data.synthetic import TaskConfig
+from repro.dtrain.runner import DTrainConfig, run, sim_arch
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--clients", type=int, default=16)
+    p.add_argument("--topology", default="meshgrid")
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--flood-k", type=int, default=None)
+    p.add_argument("--small", action="store_true")
+    p.add_argument("--out", default="/tmp/seedflood_ckpt.npz")
+    args = p.parse_args()
+
+    if args.small:
+        arch = sim_arch(d_model=64, n_layers=2, n_heads=4, d_ff=128)
+    else:
+        import dataclasses
+        # opt-125m with the synthetic task's vocab (256) — same depth/width,
+        # ~86M params; the full 50k vocab would only slow the CPU example
+        arch = dataclasses.replace(archs.get("opt-125m"), vocab=256,
+                                   name="opt-125m-synth")
+
+    cfg = DTrainConfig(
+        method="seedflood", n_clients=args.clients, topology=args.topology,
+        steps=args.steps, lr=args.lr, batch_size=8, subcge_rank=32,
+        subcge_tau=1000, flood_k=args.flood_k, eval_every=max(args.steps // 5, 1),
+        arch=arch, task=TaskConfig(vocab=arch.vocab, seq_len=32,
+                                   concentration=0.02))
+
+    print(f"training {arch.name} on {args.clients} clients ({args.topology}), "
+          f"{args.steps} steps, flooding k={args.flood_k or 'diameter'}")
+    r = run(cfg)
+
+    print(f"\nGMP (averaged-model accuracy): {r.gmp:.4f}")
+    print(f"loss: {r.loss_curve[0]:.4f} -> {r.loss_curve[-1]:.4f}")
+    for step, acc in r.acc_curve:
+        print(f"  step {step:>5}: GMP {acc:.4f}")
+    print(f"communication: {fmt_bytes(r.total_bytes)} total, "
+          f"{fmt_bytes(r.bytes_per_edge)}/edge, "
+          f"{r.extra['n_messages']} messages")
+    print(f"consensus error: {r.consensus_error:.2e}")
+    if "final_params" in r.extra:
+        ckpt.save(args.out, r.extra["final_params"], {"gmp": r.gmp})
+        print(f"checkpoint: {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro — SeedFlood: scalable decentralized LLM training in JAX.
+
+Subpackages:
+  core        seed-reconstructible ZO updates, SubCGE, flooding, gossip
+  models      functional decoder zoo (dense/MoE/SSM/hybrid/VLM/audio)
+  configs     assigned architectures + input shapes
+  dtrain      decentralized-network simulator (Algorithm 1 + baselines)
+  launch      pod runtime: meshes, sharded steps, dry-run, train driver
+  kernels     Pallas TPU kernels (+ jnp oracles)
+  roofline    analytic cost model + HLO collective analysis
+  data/optim/checkpoint/topology   substrates
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,64 @@
+"""Checkpointing: flattened-pytree .npz + JSON metadata.
+
+Simple, dependency-free and exact: leaves are saved under their canonical
+'/'-joined paths, restored into the reference tree structure.  ZO training
+state is just (params, step, global_seed) — there are no optimizer moments
+to save, which is itself one of SeedFlood's deployment advantages (a 1T
+model checkpoints at 1× param bytes).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import params as plib
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = plib.flatten_paths(tree)
+    arrays = {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bf16 — store as uint16 bits with a dtype marker
+            arrays[k + "::bf16"] = arr.view(np.uint16)
+        else:
+            arrays[k] = arr
+    np.savez(path, **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(metadata or {}, f, indent=2, default=str)
+
+
+def load(path: str, like: Any | None = None) -> tuple[Any, dict]:
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        flat: dict[str, np.ndarray] = {}
+        for k in z.files:
+            if k.endswith("::bf16"):
+                flat[k[:-6]] = jax.numpy.asarray(z[k]).view(jnp.bfloat16)
+            else:
+                flat[k] = z[k]
+    meta = {}
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    if not os.path.exists(meta_path):
+        meta_path = path + ".meta.json"
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    tree = plib.nest({k: jnp.asarray(v) for k, v in flat.items()})
+    if like is not None:
+        ref_flat = plib.flatten_paths(like)
+        got_flat = plib.flatten_paths(tree)
+        missing = set(ref_flat) - set(got_flat)
+        extra = set(got_flat) - set(ref_flat)
+        if missing or extra:
+            raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                             f"extra={sorted(extra)[:5]}")
+        tree = jax.tree.map(lambda r, g: jnp.asarray(g, r.dtype).reshape(r.shape),
+                            like, tree)
+    return tree, meta

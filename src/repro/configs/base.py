@@ -1,0 +1,176 @@
+"""Architecture / shape configuration dataclasses.
+
+An ``ArchConfig`` describes a decoder stack as a list of *groups*; each group
+is a repeating *period* of layer slots that is lax.scan'ed over its ``reps``
+(keeping HLO size depth-independent).  E.g.
+
+* dense 80L           -> one group, 1 slot, 80 reps
+* Jamba (1:7, MoE/2)  -> one group, 8 slots (1 attn + 7 mamba, MoE on odd), 9 reps
+* Gemma-3 (5 local:1 global), 26L -> group(5 local + 1 global) × 4  +  group(local) × 2
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    window: int | None = None          # None = global attention
+    # MLA (DeepSeek-V2): active iff kv_lora > 0
+    q_lora: int = 0
+    kv_lora: int = 0
+    rope_head_dim: int = 0             # decoupled RoPE dims (MLA)
+    v_head_dim: int = 0                # MLA value head dim (0 -> head_dim)
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0                   # 0 -> ceil(d_model/16)
+    chunk: int = 256                   # associative-scan chunking (memory)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0                  # shared (always-on) experts
+    capacity_factor: float = 1.25
+    router_aux: float = 0.0            # load-balance aux loss coefficient
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCfg:
+    mixer: str = "attn"                # "attn" | "mamba" | "none"
+    attn: AttnCfg | None = None
+    mamba: MambaCfg | None = None
+    ffn: str = "dense"                 # "dense" | "moe" | "none"
+    d_ff: int = 0
+    moe: MoECfg | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    slots: tuple[LayerCfg, ...]
+    reps: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendCfg:
+    """Stubbed modality frontend (the one allowed carve-out): input_specs()
+    supplies precomputed frame/patch embeddings; we own only the projector."""
+    kind: str                          # "vision" | "audio_cond"
+    n_embeds: int                      # patches / conditioning frames
+    embed_dim: int                     # pre-projector dim (e.g. ViT width)
+    source: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int
+    vocab: int
+    groups: tuple[Group, ...]
+    norm: str = "rmsnorm"              # rmsnorm | layernorm
+    act: str = "silu"                  # silu | gelu | relu
+    gated_mlp: bool = True
+    pos: str = "rope"                  # rope | learned | sinusoidal | none
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    max_seq: int = 131_072
+    frontend: FrontendCfg | None = None
+    sharding_policy: str = "tp"        # tp | fsdp_tp | ep
+    # §Perf: all-gather fsdp-sharded expert weights at use instead of
+    # psumming expert activation buffers (see models/perturb.expert_dense)
+    moe_gather_weights: bool = False
+    # §Perf: pin the residual stream's d_model axis to replicated.  Under
+    # fsdp_tp the embedding output inherits "embed"->data sharding and every
+    # downstream contraction then psums activations over data; this
+    # constraint makes weights (not activations) pay the fsdp gather.
+    residual_replicated: bool = False
+    # long_500k handling: "native" (sub-quadratic already) or "sliding_window"
+    # (explicit variant for full-attention archs; see DESIGN.md §5)
+    long_context_mode: str = "sliding_window"
+    sliding_window_size: int = 4096
+    source: str = ""                   # citation [arXiv:... / hf:...]
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(g.slots) * g.reps for g in self.groups)
+
+    def layer_cfgs(self) -> list[LayerCfg]:
+        out: list[LayerCfg] = []
+        for g in self.groups:
+            out.extend(list(g.slots) * g.reps)
+        return out
+
+    def with_sliding_window(self, window: int) -> "ArchConfig":
+        """Long-context variant: clamp every global-attention slot to a
+        sliding window (ring-buffer cache).  Used by long_500k for
+        full-attention archs."""
+        def clamp(slot: LayerCfg) -> LayerCfg:
+            if slot.mixer != "attn" or slot.attn is None:
+                return slot
+            w = slot.attn.window
+            new_w = window if w is None else min(w, window)
+            return dataclasses.replace(slot, attn=dataclasses.replace(slot.attn, window=new_w))
+
+        groups = tuple(dataclasses.replace(g, slots=tuple(clamp(s) for s in g.slots))
+                       for g in self.groups)
+        return dataclasses.replace(self, groups=groups,
+                                   name=self.name + "+sw" + str(window))
+
+    def for_shape(self, shape: "InputShape") -> "ArchConfig":
+        """Arch variant actually lowered for a given input shape."""
+        if (shape.kind == "decode" and shape.seq > 100_000
+                and self.long_context_mode == "sliding_window"):
+            return self.with_sliding_window(self.sliding_window_size)
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str                          # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# -- small builders ----------------------------------------------------------
+
+def dense_layer(d_model: int, n_heads: int, n_kv: int, d_ff: int,
+                head_dim: int | None = None, qkv_bias: bool = False,
+                window: int | None = None) -> LayerCfg:
+    hd = head_dim if head_dim is not None else d_model // n_heads
+    return LayerCfg(mixer="attn",
+                    attn=AttnCfg(n_heads, n_kv, hd, qkv_bias, window),
+                    ffn="dense", d_ff=d_ff)
+
+
+def uniform_dense(name: str, *, n_layers: int, d_model: int, n_heads: int,
+                  n_kv: int, d_ff: int, vocab: int, head_dim: int | None = None,
+                  qkv_bias: bool = False, **kw) -> ArchConfig:
+    slot = dense_layer(d_model, n_heads, n_kv, d_ff, head_dim, qkv_bias)
+    return ArchConfig(name=name, family="dense", d_model=d_model, vocab=vocab,
+                      groups=(Group((slot,), n_layers),), **kw)

@@ -1,0 +1,3 @@
+"""Core SeedFlood machinery: shared-randomness seeds, SubCGE subspace
+gradient estimation, ZO estimators, flooding consensus, gossip baselines."""
+from repro.core import seeds, subcge, zo, flood, gossip, messages  # noqa: F401

@@ -1,0 +1,134 @@
+"""Flooding as a consensus primitive (paper §3.3, Algorithm 1 block (C)).
+
+Faithful implementation of the recursive flood: upon *first* receipt of a
+message, a client forwards it to all neighbours next round; duplicates are
+filtered against the seen-set ``S_i``.  After ``diameter(G)`` rounds every
+message injected at the start has reached every client exactly once, with its
+coefficient untouched — the property that distinguishes flooding from gossip.
+
+The same machinery implements **delayed flooding** (paper §4.5): run only
+``k`` rounds per local iteration and let the frontier sets ``R_i`` carry over
+to the next iteration, bounding staleness by ⌈D/k⌉.
+
+This module is deliberately pure-Python + networkx: it is the *protocol*
+layer of the simulator, where per-message bookkeeping is the whole point.
+The pod runtime (repro/launch) maps the end-to-end effect of a full flood
+onto a single all-gather instead (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import networkx as nx
+
+from repro.core.messages import Message, CommLedger, MESSAGE_BYTES
+
+
+@dataclasses.dataclass
+class ClientFloodState:
+    seen: set            # S_i — uids of every message ever accepted
+    frontier: list       # R_i — messages to forward on the next round
+
+    @classmethod
+    def empty(cls) -> "ClientFloodState":
+        return cls(seen=set(), frontier=[])
+
+
+class FloodNetwork:
+    """Message-passing state for one decentralized run."""
+
+    def __init__(self, graph: nx.Graph):
+        if not nx.is_connected(graph):
+            raise ValueError("SeedFlood assumes a connected communication graph")
+        self.graph = graph
+        self.n = graph.number_of_nodes()
+        self.neighbors = [sorted(graph.neighbors(i)) for i in range(self.n)]
+        self.diameter = nx.diameter(graph)
+        self.states = [ClientFloodState.empty() for _ in range(self.n)]
+        self.ledger = CommLedger(n_edges=graph.number_of_edges())
+
+    # -- Algorithm 1: R_i = R_i ∪ {(s_{i,t}, η α / n)} ------------------------
+    def inject(self, client: int, msg: Message) -> None:
+        """A client's freshly generated update enters its own frontier (it has
+        already applied it locally — Algorithm 1 applies the local update in
+        block (B) and floods it in block (C))."""
+        st = self.states[client]
+        if msg.uid in st.seen:
+            raise ValueError(f"duplicate injection of {msg.uid}")
+        st.seen.add(msg.uid)
+        st.frontier.append(msg)
+
+    # -- one synchronous flood round ------------------------------------------
+    def round(self) -> list[list[Message]]:
+        """All clients simultaneously send their frontier to every neighbour.
+
+        Returns, per client, the list of *newly accepted* messages this round
+        (already deduplicated against S_i) — the runner applies exactly these,
+        each exactly once, which is the fixed-coefficient property.
+        """
+        inboxes: list[list[Message]] = [[] for _ in range(self.n)]
+        for i in range(self.n):
+            st = self.states[i]
+            if not st.frontier:
+                continue
+            payload = len(st.frontier) * MESSAGE_BYTES
+            for j in self.neighbors[i]:
+                inboxes[j].extend(st.frontier)
+                self.ledger.send(payload, count=len(st.frontier))
+            st.frontier = []
+
+        fresh: list[list[Message]] = [[] for _ in range(self.n)]
+        for i in range(self.n):
+            st = self.states[i]
+            for msg in inboxes[i]:
+                if msg.uid in st.seen:
+                    continue  # R_i = R_i \ S_i
+                st.seen.add(msg.uid)  # S_i = R_i ∪ S_i
+                st.frontier.append(msg)
+                fresh[i].append(msg)
+        self.ledger.rounds += 1
+        return fresh
+
+    def rounds(self, k: int) -> list[list[Message]]:
+        """Run k flood rounds; returns per-client newly accepted messages
+        aggregated over the k rounds (what a local iteration applies)."""
+        fresh: list[list[Message]] = [[] for _ in range(self.n)]
+        for _ in range(k):
+            if all(not st.frontier for st in self.states):
+                break  # quiescent — nothing in flight anywhere
+            got = self.round()
+            for i in range(self.n):
+                fresh[i].extend(got[i])
+        return fresh
+
+    def full_flood(self) -> list[list[Message]]:
+        """Flood until quiescent (≥ diameter rounds suffice for synchronous
+        injection; carried-over frontiers may need fewer)."""
+        return self.rounds(self.diameter + 1)
+
+    # -- introspection ---------------------------------------------------------
+    def in_flight(self) -> int:
+        return sum(len(st.frontier) for st in self.states)
+
+    def coverage(self, uid) -> int:
+        """How many clients have accepted message ``uid`` (tests)."""
+        return sum(uid in st.seen for st in self.states)
+
+
+def staleness_bound(diameter: int, k: int) -> int:
+    """Paper §4.5: delayed flooding with k hops/iteration bounds message
+    staleness by ⌈D/k⌉ iterations."""
+    return -(-diameter // k)
+
+
+def flood_bytes_per_iteration(graph: nx.Graph, n_new_messages: int) -> int:
+    """Upper bound on bytes a full flood of ``n_new_messages`` costs: each
+    message traverses each *directed* edge at most once."""
+    return 2 * graph.number_of_edges() * n_new_messages * MESSAGE_BYTES
+
+
+def gossip_sr_history_bytes(t: int, n: int, graph: nx.Graph) -> int:
+    """Gossip-with-shared-randomness (paper §3.2): at iteration t each edge
+    carries the O(t·n) full history of seed–scalar pairs."""
+    return 2 * graph.number_of_edges() * t * n * MESSAGE_BYTES

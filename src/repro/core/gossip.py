@@ -1,0 +1,114 @@
+"""Gossip-based baselines (paper §2.1, §4.2).
+
+All baselines operate on *stacked* client parameters — pytrees whose leaves
+carry a leading client axis ``(n, ...)`` — so the whole network simulates as
+vectorized JAX ops:
+
+* ``mix``             — one gossip averaging round  θ_i ← Σ_j w_ij θ_j  (eq. 2's
+                        consensus half), used by DSGD / DZSGD.
+* ``choco_*``         — ChocoSGD (Koloskova et al., 2019): gossip on *compressed
+                        differences* with per-client surrogate copies x̂ and
+                        error feedback, top-k sparsification.
+* ``topk_compress``   — 99 % top-k sparsifier (the paper's Choco setting).
+
+The communication ledger entries these incur are computed by the dtrain
+runner from ``repro.core.messages`` payload formulas.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mix(stacked: Any, W: np.ndarray) -> Any:
+    """θ ← W θ on the client axis: one synchronous gossip round."""
+    Wj = jnp.asarray(W, jnp.float32)
+
+    def f(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1)
+        out = Wj @ flat.astype(jnp.float32)
+        return out.astype(leaf.dtype).reshape(leaf.shape)
+
+    return jax.tree.map(f, stacked)
+
+
+def consensus_error(stacked: Any) -> jax.Array:
+    """(1/n) Σ_i ||θ_i − θ̄||² / ||θ̄||² — the consensus-quality metric."""
+    def per_leaf(leaf):
+        mean = leaf.mean(axis=0, keepdims=True)
+        num = jnp.sum((leaf.astype(jnp.float32) - mean.astype(jnp.float32)) ** 2)
+        den = jnp.sum(mean.astype(jnp.float32) ** 2) * leaf.shape[0]
+        return num, den
+
+    nums_dens = [per_leaf(l) for l in jax.tree.leaves(stacked)]
+    num = sum(n for n, _ in nums_dens)
+    den = sum(d for _, d in nums_dens)
+    return num / jnp.maximum(den, 1e-20)
+
+
+# ---------------------------------------------------------------------------
+# compression operators
+# ---------------------------------------------------------------------------
+
+def topk_compress(x: jax.Array, density: float) -> jax.Array:
+    """Keep the top ⌈density·d⌉ entries by magnitude, zero the rest.
+
+    Returned dense-with-zeros (the simulator's ledger charges only the sparse
+    payload; see messages.topk_payload_bytes).
+    """
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * density))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    return (flat * mask).reshape(x.shape).astype(x.dtype)
+
+
+def tree_topk(tree: Any, density: float) -> Any:
+    return jax.tree.map(lambda l: topk_compress(l, density), tree)
+
+
+# ---------------------------------------------------------------------------
+# ChocoSGD state
+# ---------------------------------------------------------------------------
+
+class ChocoState(NamedTuple):
+    x_hat: Any   # stacked surrogate copies x̂_i   (n, ...)
+    # Neighbour surrogates are recovered as W x̂ since every client can track
+    # every neighbour's x̂ from the same compressed stream.
+
+
+def choco_init(stacked_params: Any) -> ChocoState:
+    """Paper App. B.2: surrogates initialized *at the pretrained weights*
+    (noted as a substantial improvement over zero-init)."""
+    return ChocoState(x_hat=jax.tree.map(jnp.copy, stacked_params))
+
+
+def choco_round(params: Any, state: ChocoState, W: np.ndarray,
+                density: float, consensus_lr: float = 1.0):
+    """One ChocoSGD communication round.
+
+    q_i = C(x_i − x̂_i)            (compress the innovation)
+    x̂_i ← x̂_i + q_i               (all clients update all surrogates)
+    x_i ← x_i + γ Σ_j w_ij (x̂_j − x̂_i)
+
+    Returns (new_params, new_state, bits_payload_density) — the runner charges
+    topk payload bytes for q.
+    """
+    q = jax.tree.map(lambda x, xh: topk_compress(x - xh, density),
+                     params, state.x_hat)
+    x_hat = jax.tree.map(jnp.add, state.x_hat, q)
+
+    Wj = jnp.asarray(W, jnp.float32)
+    n = Wj.shape[0]
+    L = Wj - jnp.eye(n)  # Σ_j w_ij (x̂_j − x̂_i) = (W − I) x̂
+
+    def upd(x, xh):
+        flat = xh.reshape(n, -1).astype(jnp.float32)
+        corr = (L @ flat).reshape(xh.shape)
+        return (x.astype(jnp.float32) + consensus_lr * corr).astype(x.dtype)
+
+    new_params = jax.tree.map(upd, params, x_hat)
+    return new_params, ChocoState(x_hat=x_hat)

@@ -1,0 +1,76 @@
+"""Seed-scalar messages and byte accounting (paper §3.1, Table 1, Fig. 1).
+
+A SeedFlood wire message is ``(seed, coef)``: a 4-byte uint32 seed and a
+2-byte fp16 coefficient (the paper quotes ~400 KB for 5000 iterations × 16
+clients per edge, i.e. ≈5 B/message; we default to 8 B with a 2-byte header
+to stay conservative).  The ledger tracks *bytes per edge* — the paper's
+communication-cost metric — for every protocol so Fig. 1/3 and Table 8 can be
+reproduced exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+SEED_BYTES = 4      # uint32 seed
+COEF_BYTES = 2      # fp16 scalar
+HEADER_BYTES = 2    # dedup id / framing
+MESSAGE_BYTES = SEED_BYTES + COEF_BYTES + HEADER_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class Message:
+    """One seed-reconstructible ZO update m = (s, α·η/n)."""
+    seed: int          # s_{i,t} — reconstructs the perturbation anywhere
+    coef: float        # the *fixed* coefficient (flooding never reweights it)
+    origin: int        # producing client (debug/bookkeeping only)
+    step: int          # producing iteration (staleness accounting)
+
+    @property
+    def uid(self) -> tuple[int, int]:
+        return (self.origin, self.step)
+
+    @property
+    def nbytes(self) -> int:
+        return MESSAGE_BYTES
+
+
+@dataclasses.dataclass
+class CommLedger:
+    """Byte counters, kept per protocol run.
+
+    ``per_edge`` is the paper's reported metric: total transmitted volume over
+    each network edge during the entire training (Table 8 'Cost').
+    """
+    total_bytes: int = 0
+    n_edges: int = 1
+    n_messages: int = 0
+    rounds: int = 0
+
+    def send(self, nbytes: int, count: int = 1) -> None:
+        self.total_bytes += nbytes
+        self.n_messages += count
+
+    @property
+    def per_edge(self) -> float:
+        return self.total_bytes / max(1, self.n_edges)
+
+
+def dense_payload_bytes(n_params: int, dtype_bytes: int = 4) -> int:
+    """Bytes to gossip one full model copy (traditional gossip, O(d))."""
+    return n_params * dtype_bytes
+
+
+def topk_payload_bytes(n_params: int, density: float, dtype_bytes: int = 4,
+                       index_bytes: int = 4) -> int:
+    """ChocoSGD-style top-k sparsified payload: values + indices."""
+    k = max(1, int(n_params * density))
+    return k * (dtype_bytes + index_bytes)
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024.0:
+            return f"{b:.2f}{unit}"
+        b /= 1024.0
+    return f"{b:.2f}EB"

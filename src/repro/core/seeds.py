@@ -1,0 +1,105 @@
+"""Shared-randomness primitives (paper §3.1).
+
+Every client in a SeedFlood network owns the same counter-based RNG; a 64-bit
+integer seed fully determines a perturbation.  We build everything on
+``jax.random`` fold-in semantics so that
+
+  * the same seed reproduces the same perturbation on any client, any backend;
+  * seeds compose hierarchically (global seed -> step -> client -> leaf);
+  * nothing is stateful: seeds are data, not objects.
+
+Seed layout
+-----------
+``client_seed(base, step, client)`` is the ``s_{i,t}`` of the paper: the seed a
+client attaches to its message.  ``leaf_key(seed, path)`` derives the
+per-tensor stream used by ``RNG_S`` (Algorithm 1) to sample the canonical
+coordinates (2D leaves) or the dense Gaussian (non-2D leaves).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def key_from_seed(seed) -> jax.Array:
+    """Make a PRNG key from a (possibly traced) integer seed."""
+    return jax.random.PRNGKey(seed)
+
+
+def path_hash(path: str) -> int:
+    """Stable 31-bit hash of a parameter path (python hash() is salted)."""
+    h = hashlib.blake2s(path.encode("utf-8"), digest_size=4).digest()
+    return int.from_bytes(h, "little") & 0x7FFFFFFF
+
+
+def client_seed(base_seed, step, client):
+    """``s_{i,t}``: the seed client ``i`` attaches to its step-``t`` message.
+
+    Kept as a plain int32 so it is exactly what travels on the wire in the
+    simulator and what the sharded step folds in.  Collision-free for
+    (step, client) pairs within a run: client count < 2**16.
+    """
+    return (jnp.asarray(base_seed, jnp.uint32)
+            + jnp.asarray(step, jnp.uint32) * jnp.uint32(65536)
+            + jnp.asarray(client, jnp.uint32)).astype(jnp.uint32)
+
+
+def message_key(seed) -> jax.Array:
+    """PRNG key for a seed that arrived in a message."""
+    return jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+
+
+def leaf_key(key: jax.Array, path: str) -> jax.Array:
+    """Derive the per-tensor stream (RNG_S iterates leaves in a fixed order;
+    we make the order irrelevant by folding a stable path hash instead)."""
+    return jax.random.fold_in(key, path_hash(path))
+
+
+def subspace_key(global_seed, step, path: str) -> jax.Array:
+    """Key for (re)generating the shared subspace U_l / V_l at refresh step
+    ``step`` (Algorithm 1 block (A): 'Initialize RNG with seed s_glob + t')."""
+    k = jax.random.fold_in(jax.random.PRNGKey(jnp.asarray(global_seed, jnp.uint32)),
+                           jnp.asarray(step, jnp.uint32))
+    return leaf_key(k, path)
+
+
+def coord_sample(key: jax.Array, batch_shape: Sequence[int], rank: int):
+    """Sample canonical coordinates (i, j) ~ Unif[r]^2 for every layer
+    instance in ``batch_shape`` (scan periods and/or experts)."""
+    ki, kj = jax.random.split(key)
+    i = jax.random.randint(ki, tuple(batch_shape), 0, rank, dtype=jnp.int32)
+    j = jax.random.randint(kj, tuple(batch_shape), 0, rank, dtype=jnp.int32)
+    return i, j
+
+
+def gaussian_like(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    """Dense Gaussian fallback perturbation for non-2D leaves (MeZO-style)."""
+    return jax.random.normal(key, shape, dtype)
+
+
+def tree_paths(tree: Any) -> list[str]:
+    """Canonical '/'-joined path strings for every leaf of a pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [_path_str(p) for p, _ in flat]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:  # pragma: no cover - future jax path types
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def map_with_paths(fn, tree: Any):
+    """tree_map that also passes the canonical path string to ``fn``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [fn(_path_str(p), v) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,78 @@
+"""Zeroth-order estimators (paper §2.2, §3.1).
+
+Two families:
+
+* ``mezo_*``   — MeZO-style dense Gaussian perturbations (the paper's
+  baseline, and the oracle that SubCGE's runtime claims are benchmarked
+  against in Fig. 5 / Table 4).
+* ``two_point_alpha`` — the symmetric two-point directional derivative shared
+  by both families (eq. 3/6):  α = (f(θ+εz) − f(θ−εz)) / 2ε.
+
+Memory discipline: like MeZO we never hold θ and θ±εz simultaneously — the
+perturbation is applied in place (functionally: θ' = θ + εz, reusing z from
+its seed) so peak memory stays at inference level.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import seeds as seedlib
+
+
+def tree_add_scaled(params: Any, z: Any, scale) -> Any:
+    return jax.tree.map(lambda p, zz: p + jnp.asarray(scale, p.dtype) * zz.astype(p.dtype),
+                        params, z)
+
+
+def mezo_z(params: Any, message_seed, frozen: Callable[[str], bool] | None = None) -> Any:
+    """Dense Gaussian perturbation reconstructed from a message seed."""
+    key = seedlib.message_key(message_seed)
+
+    def visit(path: str, leaf: jax.Array):
+        if frozen is not None and frozen(path):
+            return jnp.zeros_like(leaf)
+        return seedlib.gaussian_like(seedlib.leaf_key(key, path), leaf.shape,
+                                     jnp.float32).astype(leaf.dtype)
+
+    return seedlib.map_with_paths(visit, params)
+
+
+def two_point_alpha(loss_fn: Callable[[Any], jax.Array], params: Any, z: Any,
+                    eps: float) -> jax.Array:
+    """α = (f(θ+εz) − f(θ−εz)) / 2ε  — the scalar that travels in a message."""
+    lp = loss_fn(tree_add_scaled(params, z, eps))
+    lm = loss_fn(tree_add_scaled(params, z, -eps))
+    return (lp - lm) / (2.0 * eps)
+
+
+def mezo_alpha(loss_fn, params, message_seed, eps,
+               frozen: Callable[[str], bool] | None = None) -> jax.Array:
+    return two_point_alpha(loss_fn, params, mezo_z(params, message_seed, frozen), eps)
+
+
+def mezo_apply_messages(params: Any, message_seeds: jax.Array,
+                        coefs: jax.Array,
+                        frozen: Callable[[str], bool] | None = None) -> Any:
+    """Replay K dense messages: θ ← θ + Σ_k coef_k · N(seed_k).
+
+    O(K·d) memory-bound axpy stream — this is precisely the cost SubCGE
+    removes (Fig. 5); kept as the reference implementation and benchmark
+    baseline.
+    """
+    def body(p, sc):
+        s, c = sc
+        z = mezo_z(p, s, frozen)
+        return tree_add_scaled(p, z, c), None
+
+    out, _ = jax.lax.scan(body, params, (message_seeds, coefs))
+    return out
+
+
+def zo_sgd_step(loss_fn, params, step_seed, eps, lr):
+    """Single-client ZO-SGD (eq. 4): baseline optimizer for tests."""
+    z = mezo_z(params, step_seed)
+    alpha = two_point_alpha(loss_fn, params, z, eps)
+    return tree_add_scaled(params, z, -lr * alpha), alpha

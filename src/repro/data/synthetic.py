@@ -1,0 +1,165 @@
+"""Synthetic task suite + deterministic client partitioning.
+
+No external datasets ship in this container, so the paper's SuperGLUE
+fine-tuning is replaced by two synthetic-but-learnable tasks with the same
+experimental *shape* (few-shot fine-tuning, 1024 train examples partitioned
+across clients, fixed validation/test sets, accuracy metric):
+
+* ``classify``  — C latent classes; tokens drawn from class-conditional
+  distributions; the final position must predict the class token.  GMP =
+  classification accuracy (the paper's task-performance analogue).
+* ``markov``    — order-1 Markov language; metric = next-token accuracy.
+
+Partitions are deterministic in (seed, n_clients): uniform (the paper's
+setting) or Dirichlet non-IID for heterogeneity studies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskConfig:
+    kind: str = "classify"         # classify | markov
+    vocab: int = 256
+    seq_len: int = 32
+    n_classes: int = 4
+    n_train: int = 1024            # paper: 1,024 training samples
+    n_valid: int = 500
+    n_test: int = 1000
+    seed: int = 0
+    concentration: float = 0.3     # class-distribution peakiness
+
+
+@dataclasses.dataclass
+class Dataset:
+    tokens: np.ndarray             # (N, T) int32 — includes the label slot
+    labels: np.ndarray             # (N,) int32 — class token id (classify)
+    task: TaskConfig
+
+    def __len__(self) -> int:
+        return self.tokens.shape[0]
+
+
+def _class_distributions(task: TaskConfig, rng: np.random.Generator) -> np.ndarray:
+    """Class-conditional token distributions over the non-label vocab."""
+    usable = task.vocab - task.n_classes  # class tokens live at the top
+    alpha = np.full(usable, task.concentration)
+    return rng.dirichlet(alpha, size=task.n_classes)
+
+
+def make_splits(task: TaskConfig) -> tuple[Dataset, Dataset, Dataset]:
+    rng = np.random.default_rng(task.seed)
+    if task.kind == "classify":
+        dists = _class_distributions(task, rng)
+
+        def sample(n: int) -> tuple[np.ndarray, np.ndarray]:
+            cls = rng.integers(task.n_classes, size=n)
+            toks = np.stack([
+                rng.choice(task.vocab - task.n_classes, size=task.seq_len,
+                           p=dists[c]) for c in cls]).astype(np.int32)
+            label_tok = (task.vocab - task.n_classes + cls).astype(np.int32)
+            toks = np.concatenate([toks, label_tok[:, None]], axis=1)
+            return toks, label_tok
+
+        out = []
+        for n in (task.n_train, task.n_valid, task.n_test):
+            t, l = sample(n)
+            out.append(Dataset(t, l, task))
+        return tuple(out)  # type: ignore[return-value]
+
+    if task.kind == "markov":
+        # sparse-ish random transition matrix, shared across splits
+        P = rng.dirichlet(np.full(task.vocab, 0.05), size=task.vocab)
+
+        def sample(n: int) -> np.ndarray:
+            toks = np.zeros((n, task.seq_len + 1), np.int32)
+            toks[:, 0] = rng.integers(task.vocab, size=n)
+            for t in range(1, task.seq_len + 1):
+                u = rng.random((n, 1))
+                cdf = np.cumsum(P[toks[:, t - 1]], axis=1)
+                toks[:, t] = (u > cdf).sum(axis=1)
+            return toks
+
+        out = []
+        for n in (task.n_train, task.n_valid, task.n_test):
+            t = sample(n)
+            out.append(Dataset(t, t[:, -1].copy(), task))
+        return tuple(out)  # type: ignore[return-value]
+
+    raise ValueError(task.kind)
+
+
+# ---------------------------------------------------------------------------
+# client partitioning (paper: uniform partition of 1,024 samples)
+# ---------------------------------------------------------------------------
+
+def partition(ds: Dataset, n_clients: int, *, scheme: str = "uniform",
+              dirichlet_alpha: float = 0.5, seed: int = 0) -> list[np.ndarray]:
+    """Index sets per client.  'uniform' shuffles then splits evenly (the
+    paper's setting: {64,32,16,8} samples/client for n={16,32,64,128});
+    'dirichlet' skews class proportions per client (non-IID)."""
+    rng = np.random.default_rng(seed)
+    n = len(ds)
+    if scheme == "uniform":
+        idx = rng.permutation(n)
+        return [np.sort(a) for a in np.array_split(idx, n_clients)]
+    if scheme == "dirichlet":
+        cls = ds.labels
+        classes = np.unique(cls)
+        props = rng.dirichlet(np.full(n_clients, dirichlet_alpha), size=len(classes))
+        owner = np.zeros(n, np.int32)
+        for ci, c in enumerate(classes):
+            members = np.where(cls == c)[0]
+            rng.shuffle(members)
+            cuts = (np.cumsum(props[ci])[:-1] * len(members)).astype(int)
+            for k, part in enumerate(np.split(members, cuts)):
+                owner[part] = k
+        return [np.sort(np.where(owner == k)[0]) for k in range(n_clients)]
+    raise ValueError(scheme)
+
+
+def client_batch(ds: Dataset, part: np.ndarray, client: int, step: int,
+                 batch_size: int, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Stateless minibatch: deterministic in (client, step) — exactly the
+    B_{i,t} ~ D_i of Algorithm 1, reproducible on any host."""
+    rng = np.random.default_rng((seed * 1_000_003 + step) * 131 + client)
+    take = rng.choice(part, size=min(batch_size, len(part)),
+                      replace=len(part) < batch_size)
+    return {"tokens": jnp.asarray(ds.tokens[take])}
+
+
+def stacked_batches(ds: Dataset, parts: list[np.ndarray], step: int,
+                    batch_size: int, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """All clients' minibatches stacked on a leading client axis."""
+    bs = [client_batch(ds, parts[i], i, step, batch_size, seed)
+          for i in range(len(parts))]
+    return {"tokens": jnp.stack([b["tokens"] for b in bs])}
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+def accuracy(cfg, params, ds: Dataset, *, forward_fn, batch_size: int = 128) -> float:
+    """classify: accuracy of the label position restricted to class tokens;
+    markov: next-token accuracy at the last position."""
+    task = ds.task
+    n_cls = task.n_classes
+    correct = 0
+    for i in range(0, len(ds), batch_size):
+        toks = jnp.asarray(ds.tokens[i:i + batch_size])
+        logits, _, _ = forward_fn(cfg, params, {"tokens": toks[:, :-1]})
+        last = logits[:, -1]
+        if task.kind == "classify":
+            cls_logits = last[:, task.vocab - n_cls:]
+            pred = jnp.argmax(cls_logits, axis=-1) + (task.vocab - n_cls)
+        else:
+            pred = jnp.argmax(last, axis=-1)
+        correct += int((pred == jnp.asarray(ds.labels[i:i + batch_size])).sum())
+    return correct / len(ds)

@@ -1,0 +1,67 @@
+"""LoRA adapters for the communication-efficient FO/ZO baselines
+(paper §4.2: DSGD-LoRA / ChocoSGD-LoRA / DZSGD-LoRA; App. B.3: r=8, α=16,
+q_proj+v_proj targets).
+
+Adapters are a separate small pytree {leaf_path: {"A": (…,n,r), "B": (…,r,m)}};
+``merge`` materializes W + (α/r)·A@B (fine at simulator scale — baselines
+gossip only the adapter tree, which is what their ledger charges).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as plib
+from repro.models.params import LeafSpec
+
+
+DEFAULT_TARGETS = ("wq", "wv")
+
+
+def lora_spec(spec: Any, targets=DEFAULT_TARGETS, r: int = 8) -> dict[str, Any]:
+    flat = plib.flatten_paths(spec)
+    out: dict[str, Any] = {}
+    for path, leaf in flat.items():
+        if not isinstance(leaf, LeafSpec):
+            continue
+        name = path.split("/")[-1]
+        if name not in targets or len(leaf.shape) - leaf.n_batch_dims != 2:
+            continue
+        batch = leaf.shape[:leaf.n_batch_dims]
+        baxes = leaf.axes[:leaf.n_batch_dims]
+        n, m = leaf.shape[-2], leaf.shape[-1]
+        out[path + "/A"] = LeafSpec(batch + (n, r), baxes + (leaf.axes[-2], "lora"),
+                                    n_batch_dims=leaf.n_batch_dims, scale=0.01)
+        out[path + "/B"] = LeafSpec(batch + (r, m), baxes + ("lora", leaf.axes[-1]),
+                                    n_batch_dims=leaf.n_batch_dims, init="zeros")
+    return plib.nest(out)
+
+
+def lora_init(lspec: Any, seed: int = 0) -> Any:
+    return plib.init_params(lspec, seed)
+
+
+def merge(params: Any, lora: Any, alpha: float = 16.0) -> Any:
+    """W_eff = W + (α/r)·A@B for every adapted leaf."""
+    lora_flat = plib.flatten_paths(lora)
+    adapted: dict[str, jax.Array] = {}
+    for path in {p.rsplit("/", 1)[0] for p in lora_flat}:
+        A = lora_flat[path + "/A"]
+        B = lora_flat[path + "/B"]
+        r = A.shape[-1]
+        adapted[path] = (alpha / r) * jnp.einsum("...nr,...rm->...nm", A, B)
+
+    def visit(path: str, leaf: jax.Array):
+        if path in adapted:
+            return leaf + adapted[path].astype(leaf.dtype)
+        return leaf
+
+    from repro.core import seeds as seedlib
+    return seedlib.map_with_paths(visit, params)
+
+
+def n_lora_params(lspec: Any) -> int:
+    return sum(int(math.prod(s.shape)) for s in jax.tree.leaves(lspec))

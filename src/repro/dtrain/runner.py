@@ -1,0 +1,510 @@
+"""Decentralized training runner — the paper-faithful simulator.
+
+Implements Algorithm 1 (SeedFlood) verbatim over a real message-passing
+network, plus every baseline of §4.2, with exact per-edge byte ledgers:
+
+  seedflood     flooding of seed-scalar ZO messages + SubCGE aggregation
+  dzsgd         ZO local steps + gossip model averaging (Tang et al., 2020)
+  dsgd          FO local steps + gossip model averaging (Lian et al., 2017)
+  choco         FO + compressed-difference gossip, 99% top-k (Koloskova 2019)
+  dsgd_lora / dzsgd_lora / choco_lora   — adapters-only training+gossip
+  gossip_sr     gossip with shared randomness (paper §3.2 strawman; O(tnd))
+  central_zo    centralized n-perturbation ZO (equivalence oracle for tests)
+
+Every method keeps *per-client* parameters stacked on a leading client axis
+(SeedFlood clients provably coincide after full flooding — a test asserts
+this rather than assuming it) and reports Global Model Performance of the
+averaged model, the paper's GMP metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, Group, uniform_dense
+from repro.core import flood, gossip, messages, seeds as seedlib, subcge, zo
+from repro.core.messages import Message, MESSAGE_BYTES
+from repro.core.subcge import SubCGEConfig
+from repro.data import synthetic
+from repro.dtrain import lora as loralib
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.models.perturb import Pert, nest_subspace, sample_pert
+from repro.topology import graphs
+
+
+def sim_arch(vocab: int = 256, d_model: int = 64, n_layers: int = 2,
+             n_heads: int = 4, d_ff: int = 128) -> ArchConfig:
+    """Tiny dense decoder for simulator experiments (the paper's OPT stand-in)."""
+    return uniform_dense("sim-tiny", n_layers=n_layers, d_model=d_model,
+                         n_heads=n_heads, n_kv=n_heads, d_ff=d_ff,
+                         vocab=vocab, tie_embeddings=True, max_seq=128)
+
+
+@dataclasses.dataclass
+class DTrainConfig:
+    method: str = "seedflood"
+    n_clients: int = 8
+    topology: str = "ring"
+    steps: int = 200
+    lr: float = 1e-2
+    batch_size: int = 8
+    eps: float = 1e-3
+    local_iters: int = 5            # communicate every 5 local steps (paper)
+    flood_k: int | None = None      # None -> network diameter (full flooding)
+    subcge_rank: int = 16
+    subcge_tau: int = 1000
+    choco_density: float = 0.01     # 99% top-k sparsification (paper)
+    lora_r: int = 8
+    lora_alpha: float = 16.0
+    momentum: float = 0.0           # beyond-paper: subspace momentum β
+    eval_every: int = 0             # 0 = only at the end
+    seed: int = 0
+    partition: str = "uniform"
+    arch: ArchConfig | None = None
+    task: synthetic.TaskConfig | None = None
+
+
+@dataclasses.dataclass
+class RunResult:
+    method: str
+    gmp: float                      # final averaged-model accuracy
+    loss_curve: list[float]
+    acc_curve: list[tuple[int, float]]
+    bytes_per_edge: float
+    total_bytes: float
+    consensus_error: float
+    wall_s: float
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# shared scaffolding
+# ---------------------------------------------------------------------------
+
+class _Setup:
+    def __init__(self, cfg: DTrainConfig):
+        self.cfg = cfg
+        self.arch = cfg.arch or sim_arch()
+        self.task = cfg.task or synthetic.TaskConfig(vocab=self.arch.vocab)
+        self.train, self.valid, self.test = synthetic.make_splits(self.task)
+        self.parts = synthetic.partition(self.train, cfg.n_clients,
+                                         scheme=cfg.partition, seed=cfg.seed)
+        self.graph = graphs.make(cfg.topology, cfg.n_clients)
+        self.W = graphs.metropolis_weights(self.graph)
+        self.spec = tf.arch_spec(self.arch)
+        p0 = plib.init_params(self.spec, cfg.seed)
+        self.stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_clients,) + l.shape), p0)
+        self.meta = plib.subcge_meta(self.spec)
+        self.scfg = SubCGEConfig(rank=cfg.subcge_rank,
+                                 refresh_period=cfg.subcge_tau, eps=cfg.eps)
+        self.n_params = plib.n_params(self.spec)
+
+    def batches(self, step: int):
+        return synthetic.stacked_batches(self.train, self.parts, step,
+                                         self.cfg.batch_size, self.cfg.seed)
+
+    def gmp(self, stacked) -> float:
+        avg = jax.tree.map(lambda l: l.mean(axis=0), stacked)
+        return synthetic.accuracy(self.arch, avg, self.test,
+                                  forward_fn=tf.forward)
+
+    def valid_loss(self, stacked) -> float:
+        avg = jax.tree.map(lambda l: l.mean(axis=0), stacked)
+        toks = jnp.asarray(self.valid.tokens[:128])
+        return float(tf.lm_loss(self.arch, avg, {"tokens": toks}))
+
+
+def _pad_pow2(k: int, minimum: int = 4) -> int:
+    n = minimum
+    while n < k:
+        n *= 2
+    return n
+
+
+# ---------------------------------------------------------------------------
+# SeedFlood (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def run_seedflood(cfg: DTrainConfig) -> RunResult:
+    s = _Setup(cfg)
+    n = cfg.n_clients
+    net = flood.FloodNetwork(s.graph)
+    k_hops = cfg.flood_k if cfg.flood_k is not None else net.diameter
+    meta, scfg, arch = s.meta, s.scfg, s.arch
+
+    # ---- jitted pieces ----------------------------------------------------
+    def local_estimate(params_i, batch_i, seed_i, sub):
+        pert = sample_pert(meta, scfg, seed_i, scfg.eps)
+        lp = tf.lm_loss(arch, params_i, batch_i, sub=sub, pert=pert)
+        lm = tf.lm_loss(arch, params_i, batch_i, sub=sub,
+                        pert=pert.with_scale(-scfg.eps))
+        return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+
+    @jax.jit
+    def estimate_all(stacked, batch, seeds_t, step):
+        sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+        sub_n = nest_subspace(sub)
+        alphas, losses = jax.vmap(
+            lambda p, b, sd: local_estimate(p, {"tokens": b}, sd, sub_n)
+        )(stacked, batch["tokens"], seeds_t)
+        return alphas, losses
+
+    apply_cache: dict[int, Callable] = {}
+
+    def apply_msgs(params_i, step, seeds_k, coefs_k):
+        K = _pad_pow2(len(seeds_k))
+        if K not in apply_cache:
+            @jax.jit
+            def fn(p, sds, cfs, stp):
+                sub = subcge.subspace_at_step(meta, scfg, cfg.seed, stp)
+                return subcge.apply_messages(p, meta, scfg, sub, sds, cfs)
+            apply_cache[K] = fn
+        sds = np.zeros(K, np.uint32)
+        cfs = np.zeros(K, np.float32)
+        sds[:len(seeds_k)] = seeds_k
+        cfs[:len(coefs_k)] = coefs_k
+        return apply_cache[K](params_i, jnp.asarray(sds), jnp.asarray(cfs), step)
+
+    # ---- training loop ------------------------------------------------------
+    stacked = s.stacked
+    loss_curve, acc_curve = [], []
+    t0 = time.time()
+    for t in range(cfg.steps):
+        batch = s.batches(t)
+        seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
+        alphas, losses = estimate_all(stacked, batch, seeds_t, t)
+        alphas = np.asarray(alphas)
+        loss_curve.append(float(np.mean(np.asarray(losses))))
+
+        coefs = -cfg.lr * alphas / n
+        # (B) local update: client applies its own message immediately
+        seeds_np = np.asarray(seeds_t)
+        new_stacked = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda l: l[i], stacked)
+            p_i = apply_msgs(p_i, t, seeds_np[i:i + 1], coefs[i:i + 1])
+            new_stacked.append(p_i)
+            # (C) inject into the flood network
+            net.inject(i, Message(seed=int(seeds_np[i]), coef=float(coefs[i]),
+                                  origin=i, step=t))
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+        # flooding: k hops per local iteration (frontiers persist — delayed
+        # flooding semantics when k < diameter)
+        fresh = net.rounds(k_hops)
+        new_stacked = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda l: l[i], stacked)
+            if fresh[i]:
+                sds = np.asarray([m.seed for m in fresh[i]], np.uint32)
+                cfs = np.asarray([m.coef for m in fresh[i]], np.float32)
+                # NOTE: messages are applied under the sender's-step subspace;
+                # with τ ≥ staleness this matches the sender exactly.
+                p_i = apply_msgs(p_i, t, sds, cfs)
+            new_stacked.append(p_i)
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+        if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
+            acc_curve.append((t + 1, s.gmp(stacked)))
+
+    gmp = s.gmp(stacked)
+    return RunResult(
+        method=f"seedflood(k={k_hops})", gmp=gmp, loss_curve=loss_curve,
+        acc_curve=acc_curve, bytes_per_edge=net.ledger.per_edge,
+        total_bytes=net.ledger.total_bytes,
+        consensus_error=float(gossip.consensus_error(stacked)),
+        wall_s=time.time() - t0,
+        extra={"n_messages": net.ledger.n_messages, "diameter": net.diameter,
+               "n_params": s.n_params})
+
+
+# ---------------------------------------------------------------------------
+# gossip baselines
+# ---------------------------------------------------------------------------
+
+def _gossip_common(cfg: DTrainConfig, *, zeroth_order: bool, use_lora: bool,
+                   choco: bool) -> RunResult:
+    s = _Setup(cfg)
+    n = cfg.n_clients
+    arch, meta = s.arch, s.meta
+    ledger = messages.CommLedger(n_edges=s.graph.number_of_edges())
+    n_edges = s.graph.number_of_edges()
+
+    lspec = None
+    lora_stacked = None
+    if use_lora:
+        lspec = loralib.lora_spec(s.spec, r=cfg.lora_r)
+        l0 = loralib.lora_init(lspec, cfg.seed + 1)
+        lora_stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape), l0)
+        payload = loralib.n_lora_params(lspec) * 4
+    else:
+        payload = s.n_params * 4
+
+    def full_params(base_i, lora_i):
+        if use_lora:
+            return loralib.merge(base_i, lora_i, cfg.lora_alpha)
+        return base_i
+
+    # ---- local step ---------------------------------------------------------
+    if zeroth_order:
+        @jax.jit
+        def local_steps(base, trainable, batch, seeds_t):
+            def one(b_i, tr_i, toks, sd):
+                if use_lora:
+                    loss_fn = lambda l: tf.lm_loss(arch, full_params(b_i, l),
+                                                   {"tokens": toks})
+                else:
+                    loss_fn = lambda p: tf.lm_loss(arch, p, {"tokens": toks})
+                z = zo.mezo_z(tr_i, sd)
+                lp = loss_fn(zo.tree_add_scaled(tr_i, z, cfg.eps))
+                lm = loss_fn(zo.tree_add_scaled(tr_i, z, -cfg.eps))
+                a = (lp - lm) / (2 * cfg.eps)
+                return zo.tree_add_scaled(tr_i, z, -cfg.lr * a), 0.5 * (lp + lm)
+            return jax.vmap(one)(base, trainable, batch["tokens"], seeds_t)
+    else:
+        @jax.jit
+        def local_steps(base, trainable, batch):
+            def one(b_i, tr_i, toks):
+                if use_lora:
+                    loss_fn = lambda l: tf.lm_loss(arch, full_params(b_i, l),
+                                                   {"tokens": toks})
+                else:
+                    loss_fn = lambda p: tf.lm_loss(arch, p, {"tokens": toks})
+                loss, g = jax.value_and_grad(loss_fn)(tr_i)
+                new = jax.tree.map(lambda p, gg: p - cfg.lr * gg.astype(p.dtype),
+                                   tr_i, g)
+                return new, loss
+            return jax.vmap(one, in_axes=(0, 0, 0))(base, trainable, batch["tokens"])
+
+    trainable = lora_stacked if use_lora else s.stacked
+    base = s.stacked
+    choco_state = gossip.choco_init(trainable) if choco else None
+
+    loss_curve, acc_curve = [], []
+    t0 = time.time()
+    for t in range(cfg.steps):
+        batch = s.batches(t)
+        if zeroth_order:
+            seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
+            trainable, stat = local_steps(base, trainable, batch, seeds_t)
+        else:
+            trainable, stat = local_steps(base, trainable, batch)
+        loss_curve.append(float(np.mean(np.asarray(stat))))
+
+        if (t + 1) % cfg.local_iters == 0:
+            if choco:
+                trainable, choco_state = gossip.choco_round(
+                    trainable, choco_state, s.W, cfg.choco_density)
+                ledger.send(2 * n_edges * messages.topk_payload_bytes(
+                    payload // 4, cfg.choco_density))
+            else:
+                trainable = gossip.mix(trainable, s.W)
+                ledger.send(2 * n_edges * payload)
+        if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
+            merged = jax.vmap(full_params)(base, trainable) if use_lora else trainable
+            acc_curve.append((t + 1, s.gmp(merged)))
+
+    merged = jax.vmap(full_params)(base, trainable) if use_lora else trainable
+    name = ("choco" if choco else ("dzsgd" if zeroth_order else "dsgd"))
+    if use_lora:
+        name += "_lora"
+    return RunResult(
+        method=name, gmp=s.gmp(merged), loss_curve=loss_curve,
+        acc_curve=acc_curve, bytes_per_edge=ledger.per_edge,
+        total_bytes=ledger.total_bytes,
+        consensus_error=float(gossip.consensus_error(merged)),
+        wall_s=time.time() - t0, extra={"n_params": s.n_params})
+
+
+def run_dsgd(cfg):   return _gossip_common(cfg, zeroth_order=False, use_lora=False, choco=False)
+def run_dzsgd(cfg):  return _gossip_common(cfg, zeroth_order=True, use_lora=False, choco=False)
+def run_choco(cfg):  return _gossip_common(cfg, zeroth_order=False, use_lora=False, choco=True)
+def run_dsgd_lora(cfg):  return _gossip_common(cfg, zeroth_order=False, use_lora=True, choco=False)
+def run_dzsgd_lora(cfg): return _gossip_common(cfg, zeroth_order=True, use_lora=True, choco=False)
+def run_choco_lora(cfg): return _gossip_common(cfg, zeroth_order=False, use_lora=True, choco=True)
+
+
+# ---------------------------------------------------------------------------
+# gossip with shared randomness (§3.2 strawman — O(tn) comm, O(tnd) compute)
+# ---------------------------------------------------------------------------
+
+def run_gossip_sr(cfg: DTrainConfig) -> RunResult:
+    s = _Setup(cfg)
+    n = cfg.n_clients
+    arch, meta, scfg = s.arch, s.meta, s.scfg
+    ledger = messages.CommLedger(n_edges=s.graph.number_of_edges())
+    neigh = graphs.neighbors(s.graph)
+    W = s.W
+
+    # per-client coefficient ledgers: uid -> [seed, alpha_scaled, coef_i]
+    hist: list[dict] = [dict() for _ in range(n)]
+    stacked = s.stacked
+    applied: list[dict] = [dict() for _ in range(n)]  # uid -> coef already in θ_i
+
+    @jax.jit
+    def estimate_all(stacked_p, batch, seeds_t, step):
+        sub = nest_subspace(subcge.subspace_at_step(meta, scfg, cfg.seed, step))
+        def one(p, toks, sd):
+            pert = sample_pert(meta, scfg, sd, scfg.eps)
+            lp = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub, pert=pert)
+            lm = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub,
+                            pert=pert.with_scale(-scfg.eps))
+            return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+        return jax.vmap(one)(stacked_p, batch["tokens"], seeds_t)
+
+    apply_cache: dict[int, Callable] = {}
+
+    def apply_deltas(p_i, step, sds, cfs):
+        K = _pad_pow2(len(sds))
+        if K not in apply_cache:
+            @jax.jit
+            def fn(p, ss, cc, stp):
+                sub = subcge.subspace_at_step(meta, scfg, cfg.seed, stp)
+                return subcge.apply_messages(p, meta, scfg, sub, ss, cc)
+            apply_cache[K] = fn
+        pad_s = np.zeros(K, np.uint32); pad_s[:len(sds)] = sds
+        pad_c = np.zeros(K, np.float32); pad_c[:len(cfs)] = cfs
+        return apply_cache[K](p_i, jnp.asarray(pad_s), jnp.asarray(pad_c), step)
+
+    loss_curve = []
+    reconstructions = 0
+    t0 = time.time()
+    for t in range(cfg.steps):
+        batch = s.batches(t)
+        seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
+        alphas, losses = estimate_all(stacked, batch, seeds_t, t)
+        alphas = np.asarray(alphas); seeds_np = np.asarray(seeds_t)
+        loss_curve.append(float(np.mean(np.asarray(losses))))
+        for i in range(n):
+            uid = (i, t)
+            hist[i][uid] = [int(seeds_np[i]), float(-cfg.lr * alphas[i]), 1.0]
+
+        if (t + 1) % cfg.local_iters == 0:
+            # exchange full histories; average coefficients (eq. 8)
+            all_uids = set()
+            for i in range(n):
+                all_uids |= set(hist[i].keys())
+            for i in range(n):
+                for j in neigh[i]:
+                    ledger.send(len(hist[j]) * MESSAGE_BYTES, count=len(hist[j]))
+            new_hist = []
+            for i in range(n):
+                h = {}
+                for uid in all_uids:
+                    cbar = sum(W[i, j] * hist[j].get(uid, [0, 0, 0.0])[2]
+                               for j in range(n) if W[i, j] > 0)
+                    ref = next(hist[j][uid] for j in range(n) if uid in hist[j])
+                    h[uid] = [ref[0], ref[1], cbar]
+                new_hist.append(h)
+            hist = new_hist
+
+        # incremental re-application of coefficient deltas: O(t·n·d) — the
+        # §3.2 cost blow-up, measured
+        new_stacked = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda l: l[i], stacked)
+            sds, cfs = [], []
+            for uid, (sd, a_scaled, c) in hist[i].items():
+                prev = applied[i].get(uid, 0.0)
+                delta = c * a_scaled - prev
+                if abs(delta) > 0:
+                    sds.append(sd); cfs.append(delta)
+                    applied[i][uid] = c * a_scaled
+            if sds:
+                reconstructions += len(sds)
+                p_i = apply_deltas(p_i, t, np.asarray(sds, np.uint32),
+                                   np.asarray(cfs, np.float32))
+            new_stacked.append(p_i)
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+    return RunResult(
+        method="gossip_sr", gmp=s.gmp(stacked), loss_curve=loss_curve,
+        acc_curve=[], bytes_per_edge=ledger.per_edge,
+        total_bytes=ledger.total_bytes,
+        consensus_error=float(gossip.consensus_error(stacked)),
+        wall_s=time.time() - t0,
+        extra={"reconstructions": reconstructions, "n_params": s.n_params})
+
+
+# ---------------------------------------------------------------------------
+# centralized ZO oracle (equivalence target for tests)
+# ---------------------------------------------------------------------------
+
+def run_central_zo(cfg: DTrainConfig) -> RunResult:
+    """Centralized SubCGE-ZO with n perturbations per step, averaging the n
+    two-point estimates — mathematically identical to SeedFlood under full
+    flooding (same seeds, same batches)."""
+    s = _Setup(cfg)
+    n = cfg.n_clients
+    arch, meta, scfg = s.arch, s.meta, s.scfg
+
+    @jax.jit
+    def step_fn(params, velocity, batch, seeds_t, step):
+        sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+        sub_n = nest_subspace(sub)
+        def one(toks, sd):
+            pert = sample_pert(meta, scfg, sd, scfg.eps)
+            lp = tf.lm_loss(arch, params, {"tokens": toks}, sub=sub_n, pert=pert)
+            lm = tf.lm_loss(arch, params, {"tokens": toks}, sub=sub_n,
+                            pert=pert.with_scale(-scfg.eps))
+            return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+        alphas, losses = jax.vmap(one)(batch["tokens"], seeds_t)
+        coefs = -cfg.lr * alphas / n
+        if cfg.momentum > 0.0:
+            # beyond-paper: momentum in the r×r coefficient space (O(r²)
+            # state/leaf, consensus-safe; velocity resets at τ-refresh
+            # since it is only meaningful within its subspace window)
+            is_refresh = jnp.logical_and(step > 0,
+                                         step % scfg.refresh_period == 0)
+            velocity = {p: jnp.where(is_refresh, jnp.zeros_like(v), v)
+                        for p, v in velocity.items()}
+            new, velocity = subcge.momentum_apply(
+                params, meta, scfg, sub, velocity, seeds_t, coefs,
+                beta=cfg.momentum)
+        else:
+            new = subcge.apply_messages(params, meta, scfg, sub, seeds_t, coefs)
+        return new, velocity, jnp.mean(losses)
+
+    params = jax.tree.map(lambda l: l[0], s.stacked)
+    velocity = subcge.zero_buffers(meta, scfg)
+    loss_curve = []
+    t0 = time.time()
+    for t in range(cfg.steps):
+        batch = s.batches(t)
+        seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
+        params, velocity, loss = step_fn(params, velocity, batch, seeds_t, t)
+        loss_curve.append(float(loss))
+
+    stacked = jax.tree.map(lambda l: l[None], params)
+    return RunResult(
+        method="central_zo", gmp=s.gmp(stacked), loss_curve=loss_curve,
+        acc_curve=[], bytes_per_edge=0.0, total_bytes=0.0,
+        consensus_error=0.0, wall_s=time.time() - t0,
+        extra={"n_params": s.n_params, "final_params": params})
+
+
+METHODS: dict[str, Callable[[DTrainConfig], RunResult]] = {
+    "seedflood": run_seedflood,
+    "dsgd": run_dsgd,
+    "dzsgd": run_dzsgd,
+    "choco": run_choco,
+    "dsgd_lora": run_dsgd_lora,
+    "dzsgd_lora": run_dzsgd_lora,
+    "choco_lora": run_choco_lora,
+    "gossip_sr": run_gossip_sr,
+    "central_zo": run_central_zo,
+}
+
+
+def run(cfg: DTrainConfig) -> RunResult:
+    if cfg.method not in METHODS:
+        raise KeyError(f"unknown method '{cfg.method}' (have {sorted(METHODS)})")
+    return METHODS[cfg.method](cfg)

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's compute hot-spots (validated in
+# interpret mode against the jnp oracles in ref.py; selected on TPU by
+# ops.py):
+#   subcge_apply   — W += U A V^T, the SubCGE aggregated update (App. A)
+#   rank1_matmul   — y = xW + s(xu)v^T, the fused ±ε client forward
+#   selective_scan — blocked Mamba recurrence (ssm/hybrid archs)
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,47 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``use_pallas`` defaults to False off-TPU: the dry-run path (CPU backend with
+512 placeholder devices) and the simulator use the pure-jnp references in
+ref.py; on real TPU hardware the Pallas implementations take over.  Tests
+exercise the kernels in interpret mode against the oracles across
+shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels import rank1_matmul as _r1
+from repro.kernels import selective_scan as _scan
+from repro.kernels import subcge_apply as _apply
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def subcge_apply(W, U, A, V, *, use_pallas: bool | None = None,
+                 interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas or interpret:
+        return _apply.subcge_apply(W, U, A, V, interpret=interpret)
+    return _ref.subcge_apply(W, U, A, V)
+
+
+def rank1_matmul(x, W, u, v, s, *, use_pallas: bool | None = None,
+                 interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas or interpret:
+        return _r1.rank1_matmul(x, W, u, v, s, interpret=interpret)
+    return _ref.rank1_matmul(x, W, u, v, s)
+
+
+def selective_scan(a, bx, c, h0, *, use_pallas: bool | None = None,
+                   interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas or interpret:
+        return _scan.selective_scan(a, bx, c, h0, interpret=interpret)
+    return _ref.selective_scan(a, bx, c, h0)

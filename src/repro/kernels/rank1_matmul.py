@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused rank-1-perturbed matmul  y = x W + s·(x u) v^T.
+
+The ZO dual forward evaluates every client at W ± ε·u v^T.  Materializing the
+perturbed weight would double W traffic (read + write of an n×m temp); this
+kernel computes the rank-1 epilogue inside the matmul's k-loop: the extra
+work per (bm × bk) x-tile is one (bk→1) dot for x·u, and the epilogue adds
+s·(xu)·v to the accumulator on the final k step.  W is streamed exactly once,
+same as an unperturbed matmul — the perturbation is compute-free at the
+memory roofline.
+
+Grid: (M/bm, N/bn, K/bk), k innermost/sequential; f32 accumulators in VMEM
+scratch (acc for xW, xu for the rank-1 partial).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, u_ref, v_ref, s_ref, o_ref, acc_ref, xu_ref, *, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xu_ref[...] = jnp.zeros_like(xu_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    xu_ref[...] += jnp.dot(x, u_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        s = s_ref[0, 0]
+        o_ref[...] = (acc_ref[...]
+                      + s * xu_ref[...] * v_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+def _tile(dim: int, target: int) -> int:
+    t = min(target, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def rank1_matmul(x: jax.Array, W: jax.Array, u: jax.Array, v: jax.Array,
+                 s, *, bm: int = 256, bn: int = 256, bk: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """x (M,K) @ (W (K,N) + s·u (K,) v (N,)^T) -> (M,N)."""
+    M, K = x.shape
+    K2, N = W.shape
+    assert K == K2 and u.shape == (K,) and v.shape == (N,)
+    bm = _tile(M, bm)
+    bn = _tile(N, bn)
+    bk = _tile(K, bk)
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),       # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),       # W
+            pl.BlockSpec((bk, 1), lambda i, j, k: (k, 0)),        # u column
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),        # v row
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),         # s
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, W, u.reshape(K, 1), v.reshape(1, N),
+      jnp.asarray(s, jnp.float32).reshape(1, 1))
+    return out

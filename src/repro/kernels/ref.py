@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def subcge_apply(W: jax.Array, U: jax.Array, A: jax.Array,
+                 V: jax.Array) -> jax.Array:
+    """W + U A V^T, batched over leading instance dims of W/A.
+    W (*B, n, m), U (n, r), A (*B, r, r), V (m, r)."""
+    delta = jnp.einsum("nr,...rs,ms->...nm", U.astype(jnp.float32),
+                       A.astype(jnp.float32), V.astype(jnp.float32))
+    return (W.astype(jnp.float32) + delta).astype(W.dtype)
+
+
+def rank1_matmul(x: jax.Array, W: jax.Array, u: jax.Array, v: jax.Array,
+                 s) -> jax.Array:
+    """x @ (W + s·u v^T) = x W + s (x·u) v^T.   x (M,K) W (K,N) u (K,) v (N,)."""
+    y = jnp.dot(x.astype(jnp.float32), W.astype(jnp.float32))
+    xu = jnp.dot(x.astype(jnp.float32), u.astype(jnp.float32))
+    y = y + jnp.asarray(s, jnp.float32) * xu[:, None] * v.astype(jnp.float32)[None, :]
+    return y.astype(x.dtype)
+
+
+def selective_scan(a: jax.Array, bx: jax.Array, c: jax.Array,
+                   h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sequential reference: h_t = a_t ⊙ h_{t-1} + bx_t;  y_t = Σ_n h_t·c_t.
+    a/bx (B,T,D,N), c (B,T,N), h0 (B,D,N) -> y (B,T,D), h_last (B,D,N)."""
+    def step(h, inp):
+        at, bt, ct = inp
+        h = at * h + bt
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    hT, y = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(bx, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(c, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(y, 0, 1), hT

@@ -1,0 +1,98 @@
+"""Batch dry-run driver: every (arch × shape) on the 16×16 mesh + the
+2×16×16 multi-pod mesh.  Each run is an isolated subprocess (fresh XLA
+device-count env; one failure never kills the batch).  Results land in
+results/dryrun/<arch>__<shape>__<mesh>.json and are summarized by
+benchmarks/roofline_table.py.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all [--only-single] \
+        [--archs a,b] [--shapes s1,s2] [--skip-existing]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+ARCHS = [
+    "jamba-1.5-large-398b", "qwen1.5-0.5b", "tinyllama-1.1b", "qwen2-72b",
+    "kimi-k2-1t-a32b", "musicgen-medium", "internvl2-26b", "falcon-mamba-7b",
+    "gemma3-1b", "deepseek-v2-236b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_one(arch: str, shape: str, multipod: bool, out_path: str,
+            timeout: int = 1800, extra=()) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out_path, *extra]
+    if multipod:
+        cmd.append("--multipod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    t0 = time.time()
+    try:
+        p = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout, env=env)
+        ok = p.returncode == 0
+        err = ("" if ok else (p.stderr or p.stdout)[-3000:])
+    except subprocess.TimeoutExpired:
+        ok, err = False, f"timeout after {timeout}s"
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multipod else "16x16",
+           "ok": ok, "wall_s": round(time.time() - t0, 1)}
+    if not ok:
+        rec["error"] = err
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only-single", action="store_true")
+    p.add_argument("--only-multi", action="store_true")
+    p.add_argument("--archs", default=",".join(ARCHS))
+    p.add_argument("--shapes", default=",".join(SHAPES))
+    p.add_argument("--skip-existing", action="store_true")
+    p.add_argument("--results", default=RESULTS)
+    args = p.parse_args(argv)
+
+    os.makedirs(args.results, exist_ok=True)
+    meshes = [False, True]
+    if args.only_single:
+        meshes = [False]
+    if args.only_multi:
+        meshes = [True]
+
+    status = []
+    for multipod in meshes:
+        for arch in args.archs.split(","):
+            for shape in args.shapes.split(","):
+                tag = f"{arch}__{shape}__{'2x16x16' if multipod else '16x16'}"
+                out = os.path.join(args.results, tag + ".json")
+                if args.skip_existing and os.path.exists(out):
+                    try:
+                        ok = "error" not in json.load(open(out))
+                    except Exception:
+                        ok = False
+                    if ok:
+                        print(f"[skip] {tag}")
+                        continue
+                rec = run_one(arch, shape, multipod, out)
+                status.append(rec)
+                flag = "OK " if rec["ok"] else "FAIL"
+                print(f"[{flag}] {tag} ({rec['wall_s']}s)"
+                      + ("" if rec["ok"] else f"\n  {rec.get('error','')[:500]}"),
+                      flush=True)
+
+    n_fail = sum(not r["ok"] for r in status)
+    print(f"\n{len(status) - n_fail}/{len(status)} dry-runs passed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

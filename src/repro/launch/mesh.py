@@ -1,0 +1,53 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod: 16×16 = 256 chips ("data", "model").
+Multi-pod: 2×16×16 = 512 chips ("pod", "data", "model") — the "pod" axis is
+the slow inter-pod (DCN) dimension; SeedFlood's client axis spans
+("pod", "data"), which is exactly the regime the paper targets: the
+cross-pod traffic is seed-scalar messages, not tensors.
+
+Hardware constants (TPU v5e-class, per chip) used by the roofline analysis.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+# roofline constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests on CPU)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"need {data * model} devices, have {n}")
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def mesh_size(mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes the client/batch dimension spans."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_extent(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = 1
+    for a in data_axes(mesh):
+        out *= sizes[a]
+    return out

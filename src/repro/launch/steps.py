@@ -1,0 +1,354 @@
+"""Sharded step programs for the production mesh.
+
+``seedflood_train_step``  — the paper's Algorithm 1 mapped onto a pod:
+  (A) subspace regenerated from (global_seed, τ⌊t/τ⌋) — identical on every
+      shard, no communication;
+  (B) per-client ZO estimation vmapped over the client axis (clients' batches
+      shard over ("pod","data"); each client's forward differs from the
+      shared θ only by its fused rank-1 SubCGE perturbation);
+  (C) the flood: the per-client scalars α and coords are all-gathered by XLA
+      (O(n·L) bytes — the whole point), the r×r coefficient scatters and the
+      U A V^T weight update run identically on every shard.
+
+``dsgd_train_step``       — the gossip baseline on the mesh: FO local step +
+  ring collective_permute neighbour averaging (O(d) bytes — the contrast the
+  roofline tables quantify).
+
+``prefill_step`` / ``decode_step`` — the serving programs for the
+inference-shaped inputs.
+
+All builders return (fn, example_inputs, in_shardings, out_shardings) ready
+for jax.jit(...).lower(...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import seeds as seedlib, subcge
+from repro.core.subcge import SubCGEConfig
+from repro.launch import mesh as meshlib
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.models.perturb import nest_subspace, sample_pert
+from repro.topology import graphs
+
+
+@dataclasses.dataclass(frozen=True)
+class PodConfig:
+    lr: float = 1e-5
+    eps: float = 1e-3
+    rank: int = 32
+    tau: int = 1000
+    base_seed: int = 0
+    param_dtype: Any = jnp.bfloat16
+    n_clients: int = 0             # 0 -> data-axis extent of the mesh
+    apply_mode: str = "fold"       # fold (UAV^T folded into W) | buffer
+    remat_clients: bool = False    # lax.map over clients instead of vmap
+    spmd_client_axis: bool = False  # bind the vmapped client axis to the
+    #                                 data mesh axes (vmap spmd_axis_name)
+
+    def subcge(self) -> SubCGEConfig:
+        return SubCGEConfig(rank=self.rank, refresh_period=self.tau)
+
+
+def _rep(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def train_inputs(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                 pod: PodConfig):
+    """ShapeDtypeStructs + shardings for one training step."""
+    n = pod.n_clients or meshlib.data_extent(mesh)
+    assert shape.global_batch % n == 0, (shape.global_batch, n)
+    b = shape.global_batch // n
+    daxes = meshlib.data_axes(mesh)
+    tspec = P(daxes, *([None] * 2))
+
+    text = shape.seq - (cfg.frontend.n_embeds if cfg.frontend else 0)
+    batch = {"tokens": jax.ShapeDtypeStruct((n, b, text), jnp.int32)}
+    shard = {"tokens": NamedSharding(mesh, tspec)}
+    if cfg.frontend is not None:
+        fe = cfg.frontend
+        batch["embeds"] = jax.ShapeDtypeStruct((n, b, fe.n_embeds, fe.embed_dim),
+                                               pod.param_dtype)
+        shard["embeds"] = NamedSharding(mesh, P(daxes, None, None, None))
+    return batch, shard
+
+
+def serve_batch_inputs(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                       pod: PodConfig, seq: int):
+    B = shape.global_batch
+    daxes = meshlib.data_axes(mesh)
+    dsize = meshlib.data_extent(mesh)
+    bspec = daxes if B % dsize == 0 else None
+    text = seq - (cfg.frontend.n_embeds if cfg.frontend and seq > 1 else 0)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, text), jnp.int32)}
+    shard = {"tokens": NamedSharding(mesh, P(bspec, None))}
+    if cfg.frontend is not None and seq > 1:
+        fe = cfg.frontend
+        batch["embeds"] = jax.ShapeDtypeStruct((B, fe.n_embeds, fe.embed_dim),
+                                               pod.param_dtype)
+        shard["embeds"] = NamedSharding(mesh, P(bspec, None, None))
+    return batch, shard
+
+
+def cache_shardings(cfg: ArchConfig, cache_abs: Any, mesh: Mesh,
+                    batch_sharded: bool) -> Any:
+    """Shardings for the stacked cache tree.  Batch over data axes when it
+    divides; otherwise (long_500k, B=1) the *sequence* axis shards over data.
+    Head/feature axes shard over "model" when divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = meshlib.data_axes(mesh)
+    dsize = meshlib.data_extent(mesh)
+
+    def one(path: str, leaf):
+        dims = [None] * len(leaf.shape)
+        # leading dim is always the scan "reps" axis
+        if path.endswith("kpos"):
+            return NamedSharding(mesh, P(*dims))
+        B = leaf.shape[1]
+        if batch_sharded and B % dsize == 0:
+            dims[1] = daxes
+            seq_ok = False
+        else:
+            seq_ok = True
+        name = path.split("/")[-1]
+        if name in ("k", "v"):               # (reps, B, C, KV, hd)
+            if seq_ok and leaf.shape[2] % dsize == 0:
+                dims[2] = daxes
+            if leaf.shape[3] % sizes.get("model", 1) == 0:
+                dims[3] = "model"
+            elif leaf.shape[4] % sizes.get("model", 1) == 0:
+                dims[4] = "model"
+        elif name in ("ckv", "krope"):       # (reps, B, C, dim)
+            if seq_ok and leaf.shape[2] % dsize == 0:
+                dims[2] = daxes
+            # MLA compressed-feature dim over "model": without this the
+            # 60L×32k×576 cache replicates across the model axis and a
+            # 236B decode blows the 16 GB HBM budget (observed 18.9 GiB/dev)
+            if leaf.shape[3] % sizes.get("model", 1) == 0:
+                dims[3] = "model"
+        elif name == "h":                    # (reps, B, Di, N)
+            if leaf.shape[2] % sizes.get("model", 1) == 0:
+                dims[2] = "model"
+        elif name == "conv":                 # (reps, B, Kc-1, Di)
+            if leaf.shape[3] % sizes.get("model", 1) == 0:
+                dims[3] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return seedlib.map_with_paths(one, cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# SeedFlood train step
+# ---------------------------------------------------------------------------
+
+def build_seedflood_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                               pod: PodConfig):
+    spec = tf.arch_spec(cfg)
+    meta = plib.subcge_meta(spec)
+    scfg = pod.subcge()
+    n = pod.n_clients or meshlib.data_extent(mesh)
+
+    params_abs = plib.abstract_params(spec, pod.param_dtype)
+    params_sh = plib.tree_shardings(spec, mesh, cfg.sharding_policy)
+    batch_abs, batch_sh = train_inputs(cfg, shape, mesh, pod)
+
+    def train_step(params, batch, step):
+        # buffer mode (paper App. A): params = (base W, A-buffers); the
+        # effective weights W + U A V^T are materialized on the fly each
+        # step and A is folded into W at subspace-refresh boundaries (a
+        # buffer is only valid under the subspace it accumulated against).
+        buffer_mode = pod.apply_mode == "buffer"
+        if buffer_mode:
+            params, bufs = params
+            is_refresh = jnp.logical_and(step > 0,
+                                         step % scfg.refresh_period == 0)
+            old_sub = subcge.subspace_at_step(meta, scfg, pod.base_seed,
+                                              jnp.maximum(step - 1, 0))
+            params = jax.tree.map(
+                lambda base, folded: jnp.where(is_refresh, folded, base),
+                params, subcge.fold_buffers(params, meta, old_sub, bufs))
+            bufs = jax.tree.map(
+                lambda b: jnp.where(is_refresh, jnp.zeros_like(b), b), bufs)
+
+        sub_flat = subcge.subspace_at_step(meta, scfg, pod.base_seed, step)
+        sub = nest_subspace(sub_flat)
+        eff = (subcge.effective_params(params, meta, sub_flat, bufs)
+               if buffer_mode else params)
+        cids = jnp.arange(n)
+        seeds_t = jax.vmap(lambda i: seedlib.client_seed(pod.base_seed, step, i))(cids)
+
+        def client_alpha(batch_i, seed_i):
+            pert = sample_pert(meta, scfg, seed_i, pod.eps)
+            lp = tf.lm_loss(cfg, eff, batch_i, sub=sub, pert=pert)
+            lm = tf.lm_loss(cfg, eff, batch_i, sub=sub,
+                            pert=pert.with_scale(-pod.eps))
+            return (lp - lm) / (2 * pod.eps), 0.5 * (lp + lm)
+
+        if pod.remat_clients:
+            alphas, losses = jax.lax.map(lambda ab: client_alpha(ab[0], ab[1]),
+                                         (batch, seeds_t))
+        elif pod.spmd_client_axis:
+            daxes = meshlib.data_axes(mesh)
+            alphas, losses = jax.vmap(
+                client_alpha,
+                spmd_axis_name=daxes if len(daxes) > 1 else daxes[0],
+            )(batch, seeds_t)
+        else:
+            alphas, losses = jax.vmap(client_alpha)(batch, seeds_t)
+
+        # --- consensus: the flood-equivalent all-gather of (seed, α) -------
+        coefs = (-pod.lr / n) * alphas
+        metrics = {"loss": jnp.mean(losses),
+                   "alpha_rms": jnp.sqrt(jnp.mean(alphas ** 2)),
+                   "step": step}
+        if buffer_mode:  # O(n) coordinate updates only (Table 4 "MA" row);
+            # non-matrix leaves follow MeZO directly (App. A)
+            bufs = subcge.accumulate_buffers(bufs, meta, scfg, seeds_t, coefs)
+            params = subcge.apply_vector_messages(params, meta, scfg,
+                                                  seeds_t, coefs)
+            return (params, bufs), metrics
+        new_params = subcge.apply_messages(params, meta, scfg, sub_flat,
+                                           seeds_t, coefs)
+        return new_params, metrics
+
+    if pod.apply_mode == "buffer":
+        bufs_abs = jax.eval_shape(lambda: subcge.zero_buffers(meta, scfg))
+        bufs_sh = seedlib.map_with_paths(lambda p, l: _rep(mesh), bufs_abs)
+        example = ((params_abs, bufs_abs), batch_abs,
+                   jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = ((params_sh, bufs_sh), batch_sh, _rep(mesh))
+        out_sh = ((params_sh, bufs_sh), _rep(mesh))
+    else:
+        example = (params_abs, batch_abs, jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (params_sh, batch_sh, _rep(mesh))
+        out_sh = (params_sh, _rep(mesh))
+    return train_step, example, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# DSGD gossip baseline on the mesh (roofline contrast)
+# ---------------------------------------------------------------------------
+
+def build_dsgd_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                          pod: PodConfig):
+    """FO local step + one ring-gossip round via ppermute over the client
+    axis.  Parameters are replicated per client group along "data"; the
+    gossip traffic is the full parameter pytree — O(d) per edge, the cost
+    Table 1 contrasts with SeedFlood's O(n)."""
+    spec = tf.arch_spec(cfg)
+    params_abs = plib.abstract_params(spec, pod.param_dtype)
+    params_sh = plib.tree_shardings(spec, mesh, cfg.sharding_policy)
+    batch_abs, batch_sh = train_inputs(cfg, shape, mesh, pod)
+    n = pod.n_clients or meshlib.data_extent(mesh)
+
+    def train_step(params, batch, step):
+        # per-client gradient on the client's shard (vmapped like SeedFlood)
+        def client_loss(p, b):
+            return tf.lm_loss(cfg, p, b)
+
+        def grad_i(batch_i):
+            return jax.value_and_grad(lambda p: client_loss(p, batch_i))(params)
+
+        losses, grads = jax.vmap(grad_i)(batch)
+        # DSGD with uniform mixing after local steps ≈ allreduce of the
+        # update followed by neighbour exchange; we lower the honest version:
+        # average gradients (the consensus collective is O(d)·allreduce).
+        gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        new_params = jax.tree.map(lambda p, g: p - pod.lr * g.astype(p.dtype),
+                                  params, gbar)
+        return new_params, {"loss": jnp.mean(losses), "step": step}
+
+    example = (params_abs, batch_abs, jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (params_sh, batch_sh, _rep(mesh))
+    out_sh = (params_sh, _rep(mesh))
+    return train_step, example, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                       pod: PodConfig):
+    spec = tf.arch_spec(cfg)
+    params_abs = plib.abstract_params(spec, pod.param_dtype)
+    params_sh = plib.tree_shardings(spec, mesh, cfg.sharding_policy)
+    batch_abs, batch_sh = serve_batch_inputs(cfg, shape, mesh, pod, shape.seq)
+    cache_abs = tf.abstract_cache(cfg, shape.global_batch, shape.seq,
+                                  pod.param_dtype)
+    dsize = meshlib.data_extent(mesh)
+    cache_sh = cache_shardings(cfg, cache_abs, mesh,
+                               batch_sharded=shape.global_batch % dsize == 0)
+
+    def prefill_step(params, batch):
+        cache = tf.init_cache(cfg, shape.global_batch, shape.seq,
+                              pod.param_dtype)
+        logits, new_cache, _ = tf.forward(cfg, params, batch, cache=cache,
+                                          pos=jnp.int32(0))
+        # return only the last-position logits (sampling input) + cache
+        return logits[:, -1], new_cache
+
+    example = (params_abs, batch_abs)
+    in_sh = (params_sh, batch_sh)
+    out_sh = (_rep(mesh), cache_sh)
+    return prefill_step, example, in_sh, out_sh
+
+
+def build_decode_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                      pod: PodConfig):
+    """One new token against a KV cache of ``shape.seq``.
+
+    moe_gather_weights is force-disabled here: at decode the activation
+    buffers are tiny (B×1 tokens), so psumming them costs ~nothing while
+    gathering TBs of expert weights per step regressed kimi decode 4.6×
+    (measured — see EXPERIMENTS.md §Perf sweep).
+    """
+    cfg = dataclasses.replace(cfg, moe_gather_weights=False)
+    spec = tf.arch_spec(cfg)
+    params_abs = plib.abstract_params(spec, pod.param_dtype)
+    params_sh = plib.tree_shardings(spec, mesh, cfg.sharding_policy)
+    B = shape.global_batch
+    cache_abs = tf.abstract_cache(cfg, B, shape.seq, pod.param_dtype)
+    dsize = meshlib.data_extent(mesh)
+    batch_sharded = B % dsize == 0
+    cache_sh = cache_shardings(cfg, cache_abs, mesh, batch_sharded=batch_sharded)
+    daxes = meshlib.data_axes(mesh)
+    tok_sh = NamedSharding(mesh, P(daxes if batch_sharded else None, None))
+
+    def decode_step(params, cache, tokens, pos):
+        logits, new_cache, _ = tf.forward(cfg, params, {"tokens": tokens},
+                                          cache=cache, pos=pos)
+        return logits[:, 0], new_cache
+
+    example = (params_abs, cache_abs,
+               jax.ShapeDtypeStruct((B, 1), jnp.int32),
+               jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (params_sh, cache_sh, tok_sh, _rep(mesh))
+    out_sh = (_rep(mesh), cache_sh)
+    return decode_step, example, in_sh, out_sh
+
+
+BUILDERS = {
+    "train": build_seedflood_train_step,
+    "train_dsgd": build_dsgd_train_step,
+    "prefill": build_prefill_step,
+    "decode": build_decode_step,
+}
+
+
+def build_step(kind: str, cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+               pod: PodConfig):
+    return BUILDERS[kind](cfg, shape, mesh, pod)

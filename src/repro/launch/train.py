@@ -1,0 +1,101 @@
+"""Pod training driver: runs the sharded SeedFlood train_step in a loop.
+
+On a real TPU pod this is the production entry point (one process per host;
+jax.distributed.initialize() handles the rest).  On CPU it runs the same
+program on a host mesh at reduced scale — the step function is identical to
+the one the dry-runs lower for 256/512 chips.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch tinyllama-1.1b --reduced --steps 20 --batch 8 --seq 64
+
+Checkpoints (params + step + seed — ZO has no optimizer state) land in
+--ckpt-dir every --ckpt-every steps.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import archs
+from repro.configs.base import InputShape
+from repro.data import synthetic
+from repro.launch import steps as steplib
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import params as plib
+from repro.models import transformer as tf
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="tinyllama-1.1b",
+                   choices=sorted(archs.REGISTRY))
+    p.add_argument("--reduced", action="store_true",
+                   help="reduced config (CPU-scale)")
+    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--batch", type=int, default=8, help="global batch")
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--n-clients", type=int, default=2)
+    p.add_argument("--lr", type=float, default=1e-2)
+    p.add_argument("--rank", type=int, default=16)
+    p.add_argument("--production-mesh", action="store_true",
+                   help="use the 16x16 pod mesh (requires 256 devices)")
+    p.add_argument("--ckpt-dir", default="/tmp/seedflood_pod")
+    p.add_argument("--ckpt-every", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = archs.get(args.arch)
+    if args.reduced:
+        cfg = archs.reduced(cfg)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh(1, len(jax.devices())))
+    pod = steplib.PodConfig(lr=args.lr, rank=args.rank,
+                            n_clients=args.n_clients,
+                            param_dtype=jnp.float32 if args.reduced
+                            else jnp.bfloat16)
+    fn, example, in_sh, out_sh = steplib.build_seedflood_train_step(
+        cfg, shape, mesh, pod)
+
+    # synthetic corpus, partitioned across the logical clients
+    task = synthetic.TaskConfig(vocab=cfg.vocab, seq_len=args.seq - 1,
+                                n_train=max(256, args.batch * 8))
+    train, _, test = synthetic.make_splits(task)
+    parts = synthetic.partition(train, args.n_clients)
+
+    params = plib.init_params(tf.arch_spec(cfg), 0, pod.param_dtype)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        per_client = args.batch // args.n_clients
+        t0 = time.time()
+        for step in range(args.steps):
+            toks = np.stack([
+                np.asarray(synthetic.client_batch(train, parts[i], i, step,
+                                                  per_client)["tokens"])
+                for i in range(args.n_clients)])
+            params, metrics = jitted(params, {"tokens": jnp.asarray(toks)},
+                                     jnp.int32(step))
+            if step % max(1, args.steps // 10) == 0:
+                print(f"step {step:>5}  loss {float(metrics['loss']):.4f}  "
+                      f"alpha_rms {float(metrics['alpha_rms']):.4f}", flush=True)
+            if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                path = os.path.join(args.ckpt_dir, f"step{step + 1}.npz")
+                ckpt.save(path, params, {"step": step + 1, "arch": cfg.name})
+                print(f"  saved {path}")
+        dt = time.time() - t0
+
+    acc = synthetic.accuracy(cfg, params, test, forward_fn=tf.forward)
+    print(f"\n{args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.2f} steps/s); test accuracy {acc:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

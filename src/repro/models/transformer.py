@@ -1,0 +1,304 @@
+"""Composable decoder stack: spec builder + scanned forward + caches + loss.
+
+A model is fully described by an ``ArchConfig``; this module turns it into
+
+* ``arch_spec(cfg)``    — LeafSpec tree (init/sharding/SubCGE metadata source)
+* ``forward(...)``      — train / prefill / decode forward, perturbation-aware
+* ``init_cache(...)``   — stacked KV/SSM caches for the serve path
+* ``lm_loss(...)``      — next-token CE (modality-frontend aware)
+
+Layers within a group period are unrolled; periods are lax.scan'ed, so HLO
+size scales with the period length, not depth.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Group, LayerCfg
+from repro.models import layers as L
+from repro.models import params as plib
+from repro.models.params import LeafSpec, matrix, vector
+from repro.models.perturb import Bundle, Pert, _child
+
+LEARNED_POS_LEN = 4_096  # OPT-style learned position table length
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+
+def _norm_spec(s: dict, key: str, dim: int, cfg: ArchConfig, stack) -> None:
+    s[key + "_scale"] = vector(dim, "embed", stack=stack, init="zeros")
+    if cfg.norm == "layernorm":
+        s[key + "_bias"] = vector(dim, "embed", stack=stack, init="zeros")
+
+
+def _slot_spec(slot: LayerCfg, cfg: ArchConfig, reps: int) -> dict[str, LeafSpec]:
+    stack = ((reps, "layers"),)
+    d = cfg.d_model
+    s: dict[str, LeafSpec] = {}
+
+    if slot.mixer == "attn":
+        a = slot.attn
+        _norm_spec(s, "ln_attn", d, cfg, stack)
+        if a.is_mla:
+            nope, rd, vd = a.head_dim, a.rope_head_dim, (a.v_head_dim or a.head_dim)
+            if a.q_lora > 0:
+                s["wdq"] = matrix(d, a.q_lora, "embed", "mla_latent", stack=stack)
+                s["q_ln_scale"] = vector(a.q_lora, "mla_latent", stack=stack, init="zeros")
+                s["wuq"] = matrix(a.q_lora, a.n_heads * (nope + rd),
+                                  "mla_latent", "heads_embed", stack=stack)
+            else:
+                s["wq"] = matrix(d, a.n_heads * (nope + rd),
+                                 "embed", "heads_embed", stack=stack)
+            s["wdkv"] = matrix(d, a.kv_lora + rd, "embed", "mla_latent", stack=stack)
+            s["kv_ln_scale"] = vector(a.kv_lora, "mla_latent", stack=stack, init="zeros")
+            s["wukv"] = matrix(a.kv_lora, a.n_heads * (nope + vd),
+                               "mla_latent", "heads_embed", stack=stack)
+            s["wo"] = matrix(a.n_heads * vd, d, "heads_embed", "embed", stack=stack)
+        else:
+            H, KV, hd = a.n_heads, a.n_kv_heads, a.head_dim
+            s["wq"] = matrix(d, H * hd, "embed", "heads_embed", stack=stack)
+            s["wk"] = matrix(d, KV * hd, "embed", "kv_embed", stack=stack)
+            s["wv"] = matrix(d, KV * hd, "embed", "kv_embed", stack=stack)
+            s["wo"] = matrix(H * hd, d, "heads_embed", "embed", stack=stack)
+            if a.qkv_bias:
+                s["bq"] = vector(H * hd, "heads_embed", stack=stack)
+                s["bk"] = vector(KV * hd, "kv_embed", stack=stack)
+                s["bv"] = vector(KV * hd, "kv_embed", stack=stack)
+    elif slot.mixer == "mamba":
+        m = slot.mamba
+        Di, N, Kc = m.d_inner, m.d_state, m.d_conv
+        dtr = m.dt_rank or -(-d // 16)
+        _norm_spec(s, "ln_attn", d, cfg, stack)
+        s["in_proj"] = matrix(d, 2 * Di, "embed", "mamba_inner", stack=stack)
+        s["conv_w"] = matrix(Di, Kc, "mamba_inner", "conv", stack=stack)
+        s["conv_b"] = vector(Di, "mamba_inner", stack=stack)
+        s["x_proj"] = matrix(Di, dtr + 2 * N, "mamba_inner", "dt_rank", stack=stack)
+        s["dt_proj"] = matrix(dtr, Di, "dt_rank", "mamba_inner", stack=stack)
+        s["dt_bias"] = vector(Di, "mamba_inner", stack=stack, init="dt_bias")
+        s["A_log"] = matrix(Di, N, "mamba_inner", "state", stack=stack, init="s4d")
+        s["D_skip"] = vector(Di, "mamba_inner", stack=stack, init="ones")
+        s["out_proj"] = matrix(Di, d, "mamba_inner", "embed", stack=stack)
+
+    if slot.ffn == "dense":
+        _norm_spec(s, "ln_mlp", d, cfg, stack)
+        s["w1"] = matrix(d, slot.d_ff, "embed", "mlp", stack=stack)
+        if cfg.gated_mlp:
+            s["w3"] = matrix(d, slot.d_ff, "embed", "mlp", stack=stack)
+        s["w2"] = matrix(slot.d_ff, d, "mlp", "embed", stack=stack)
+    elif slot.ffn == "moe":
+        mo = slot.moe
+        estack = stack + ((mo.n_experts, "experts"),)
+        _norm_spec(s, "ln_mlp", d, cfg, stack)
+        s["router"] = matrix(d, mo.n_experts, "embed", "experts", stack=stack)
+        # expert weights use their own d_model axis name ("expert_embed") so
+        # policies can fsdp-shard the big expert tensors over "data" without
+        # dragging the residual stream / attention weights along (§Perf)
+        s["w1"] = matrix(d, mo.d_ff_expert, "expert_embed", "mlp", stack=estack)
+        if cfg.gated_mlp:
+            s["w3"] = matrix(d, mo.d_ff_expert, "expert_embed", "mlp", stack=estack)
+        s["w2"] = matrix(mo.d_ff_expert, d, "mlp", "expert_embed", stack=estack)
+        if mo.n_shared > 0:
+            fs = mo.n_shared * mo.d_ff_expert
+            s["sw1"] = matrix(d, fs, "embed", "mlp", stack=stack)
+            if cfg.gated_mlp:
+                s["sw3"] = matrix(d, fs, "embed", "mlp", stack=stack)
+            s["sw2"] = matrix(fs, d, "mlp", "embed", stack=stack)
+    return s
+
+
+def arch_spec(cfg: ArchConfig) -> dict[str, Any]:
+    spec: dict[str, Any] = {"embed": {}}
+    spec["embed"]["tok"] = matrix(cfg.vocab, cfg.d_model, "vocab", "embed",
+                                  scale=0.02)
+    if not cfg.tie_embeddings:
+        spec["embed"]["out"] = matrix(cfg.d_model, cfg.vocab, "embed", "vocab")
+    _norm_spec(spec["embed"], "ln_f", cfg.d_model, cfg, ())
+    if cfg.pos == "learned":
+        spec["embed"]["pos"] = matrix(LEARNED_POS_LEN, cfg.d_model,
+                                      None, "embed", scale=0.02)
+    if cfg.frontend is not None:
+        spec["frontend"] = {
+            "proj": matrix(cfg.frontend.embed_dim, cfg.d_model, "vit", "embed"),
+        }
+    for gi, g in enumerate(cfg.groups):
+        spec[f"g{gi}"] = {f"s{si}": _slot_spec(slot, cfg, g.reps)
+                          for si, slot in enumerate(g.slots)}
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _slot_cache(slot: LayerCfg, cfg: ArchConfig, reps: int, B: int,
+                capacity: int, dtype) -> dict | None:
+    if slot.mixer == "attn":
+        a = slot.attn
+        C = capacity if a.window is None else min(a.window, capacity)
+        if a.is_mla:
+            rd = a.rope_head_dim
+            return {"ckv": jnp.zeros((reps, B, C, a.kv_lora), dtype),
+                    "krope": jnp.zeros((reps, B, C, rd), dtype),
+                    "kpos": jnp.full((reps, C), -1, jnp.int32)}
+        return {"k": jnp.zeros((reps, B, C, a.n_kv_heads, a.head_dim), dtype),
+                "v": jnp.zeros((reps, B, C, a.n_kv_heads, a.head_dim), dtype),
+                "kpos": jnp.full((reps, C), -1, jnp.int32)}
+    if slot.mixer == "mamba":
+        m = slot.mamba
+        return {"h": jnp.zeros((reps, B, m.d_inner, m.d_state), jnp.float32),
+                "conv": jnp.zeros((reps, B, m.d_conv - 1, m.d_inner), dtype)}
+    return None
+
+
+def init_cache(cfg: ArchConfig, B: int, capacity: int, dtype=jnp.bfloat16):
+    cache: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        cache[f"g{gi}"] = {f"s{si}": _slot_cache(slot, cfg, g.reps, B, capacity, dtype)
+                           for si, slot in enumerate(g.slots)}
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, B: int, capacity: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, B, capacity, dtype))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_slot(slot: LayerCfg, sb: Bundle, x: jax.Array, cache_slot,
+                pos, cfg: ArchConfig):
+    new_cache = None
+    if slot.mixer == "attn":
+        h = L.norm(sb, "ln_attn", x, cfg.norm)
+        mixer_cache = cache_slot if cache_slot is not None else None
+        if slot.attn.is_mla:
+            y, new_cache = L.mla_attention(sb, h, slot.attn, pos, mixer_cache,
+                                           cfg.rope_theta)
+        else:
+            y, new_cache = L.attention(sb, h, slot.attn, pos, mixer_cache,
+                                       cfg.rope_theta,
+                                       pos_kind="rope" if cfg.pos == "rope" else "none")
+        x = x + y
+    elif slot.mixer == "mamba":
+        h = L.norm(sb, "ln_attn", x, cfg.norm)
+        y, new_cache = L.mamba(sb, h, slot.mamba, cache_slot)
+        x = x + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if slot.ffn == "dense":
+        h = L.norm(sb, "ln_mlp", x, cfg.norm)
+        x = x + L.mlp(sb, h, cfg.act, cfg.gated_mlp)
+    elif slot.ffn == "moe":
+        h = L.norm(sb, "ln_mlp", x, cfg.norm)
+        y, aux = L.moe(sb, h, slot.moe, cfg.act, cfg.gated_mlp,
+                       gather_weights=cfg.moe_gather_weights)
+        x = x + y
+    return x, new_cache, aux
+
+
+def forward(cfg: ArchConfig, params: Any, batch: dict, *,
+            sub: Any = None, pert: Pert | None = None,
+            cache: Any = None, pos=0):
+    """Run the decoder.  Returns (logits, new_cache, aux_loss).
+
+    batch: {"tokens": (B, T) int32, optional "embeds": (B, P, edim)} —
+    ``embeds`` are the stubbed modality-frontend outputs, prepended after
+    projection.  ``pos`` is the absolute position of tokens[:, 0].
+    """
+    root = Bundle.make(params, sub, pert)
+    be = root["embed"]
+    tokens = batch["tokens"]
+    x = be.embed("tok", tokens)
+
+    if "embeds" in batch and "frontend" in params:
+        xf = root["frontend"].dense("proj", batch["embeds"].astype(x.dtype))
+        x = jnp.concatenate([xf, x], axis=1)
+    T = x.shape[1]
+    q_pos = pos + jnp.arange(T)
+
+    if cfg.pos == "learned":
+        x = x + be.embed("pos", jnp.clip(q_pos, 0, LEARNED_POS_LEN - 1))
+    elif cfg.pos == "sinusoidal":
+        x = x + L.sinusoidal_pos(q_pos, cfg.d_model)[None].astype(x.dtype)
+
+    if cfg.residual_replicated:
+        from jax.sharding import PartitionSpec as _P
+        U = _P.UNCONSTRAINED
+        x = jax.lax.with_sharding_constraint(
+            x, _P(*([U] * (x.ndim - 1)), None))
+
+    new_cache: dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, g in enumerate(cfg.groups):
+        gk = f"g{gi}"
+        gp = params[gk]
+        gij = _child(pert.ij, gk) if pert is not None else None
+        gzv = _child(pert.zv, gk) if pert is not None else None
+        guv = _child(sub, gk)
+        gcache = cache[gk] if cache is not None else None
+        scale = pert.scale if pert is not None else None
+
+        def body(carry, xs, g=g, guv=guv, scale=scale):
+            xc, aux_c = carry
+            pslice, ijslice, zvslice, cslice = xs
+            ncs: dict[str, Any] = {}
+            for si, slot in enumerate(g.slots):
+                sk = f"s{si}"
+                sb = Bundle(pslice[sk], _child(guv, sk), _child(ijslice, sk),
+                            _child(zvslice, sk), scale)
+                cslot = cslice[sk] if cslice is not None else None
+                xc, nc, aux = _apply_slot(slot, sb, xc, cslot, pos, cfg)
+                ncs[sk] = nc
+            return (xc, aux_c + aux), ncs
+
+        (x, aux_total), ncache = jax.lax.scan(
+            body, (x, aux_total), (gp, gij, gzv, gcache))
+        new_cache[gk] = ncache
+
+    x = L.norm(be, "ln_f", x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = be.dense_t("tok", x)
+    else:
+        logits = be.dense("out", x)
+    return logits, (new_cache if cache is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ArchConfig, params: Any, batch: dict, *,
+            sub: Any = None, pert: Pert | None = None) -> jax.Array:
+    """Mean next-token cross-entropy over the text segment (frontend embeds,
+    if any, are context only)."""
+    logits, _, aux = forward(cfg, params, batch, sub=sub, pert=pert)
+    tokens = batch["tokens"]
+    off = logits.shape[1] - tokens.shape[1]          # n frontend embeds
+    Tt = tokens.shape[1]
+    lg = logits[:, off: off + Tt - 1].astype(jnp.float32)
+    labels = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    # gold logit via masked reduction, NOT take_along_axis: a gather across a
+    # vocab-sharded axis would force an all-gather of the full logits under
+    # SPMD; the select+reduce keeps partial sums shard-local.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], lg, 0.0), axis=-1)
+    return jnp.mean(lse - gold) + aux
+
+
+# ---------------------------------------------------------------------------
+# convenience
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, seed: int = 0, dtype=jnp.float32):
+    return plib.init_params(arch_spec(cfg), seed, dtype)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    return plib.n_params(arch_spec(cfg))

@@ -1,0 +1,73 @@
+"""Optimizers and schedules.
+
+The paper trains with plain constant-LR SGD, no momentum, no weight decay
+(App. B.2) — both for the ZO methods (the coefficient η·α/n *is* the SGD
+step) and the FO baselines.  Momentum-SGD and Adam are provided for the FO
+baselines' ablations; ZO state stays empty by construction (a structural
+memory advantage recorded in the roofline tables).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: Any | None
+
+
+def sgd_init(params: Any, momentum: float = 0.0) -> SGDState:
+    if momentum == 0.0:
+        return SGDState(None)
+    return SGDState(jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(params: Any, grads: Any, state: SGDState, lr: float,
+               momentum: float = 0.0):
+    if momentum == 0.0 or state.momentum is None:
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+    buf = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                       state.momentum, grads)
+    new = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, buf)
+    return new, SGDState(buf)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adam_init(params: Any) -> AdamState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamState(z, jax.tree.map(jnp.copy, z), jnp.zeros((), jnp.int32))
+
+
+def adam_update(params: Any, grads: Any, state: AdamState, lr: float,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    c = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** c), mu)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** c), nu)
+    new = jax.tree.map(lambda p, m, v: (p - lr * m / (jnp.sqrt(v) + eps)).astype(p.dtype),
+                       params, mh, vh)
+    return new, AdamState(mu, nu, c)
+
+
+def constant_lr(lr: float) -> Callable[[int], float]:
+    return lambda step: lr
+
+
+def cosine_lr(lr: float, total: int, warmup: int = 0) -> Callable[[int], float]:
+    def fn(step: int) -> float:
+        if warmup and step < warmup:
+            return lr * (step + 1) / warmup
+        t = (step - warmup) / max(1, total - warmup)
+        return 0.5 * lr * (1.0 + float(jnp.cos(jnp.pi * min(t, 1.0))))
+    return fn

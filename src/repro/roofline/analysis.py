@@ -1,0 +1,286 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms, in seconds, per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs            / (chips × PEAK_FLOPS_BF16)
+    memory     = HLO_bytes_accessed   / (chips × HBM_BW)
+    collective = collective_bytes     / (chips × ICI_BW)
+
+``cost_analysis`` supplies flops / bytes accessed; collective bytes are NOT
+in cost_analysis, so we parse the compiled HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op's result shape is sized in bytes and weighted by an op-specific traffic
+factor (ring-algorithm effective bytes moved per participating device):
+
+    all-reduce      2·(k-1)/k · size     (reduce-scatter + all-gather)
+    all-gather      (k-1)/k · size       (size = result)
+    reduce-scatter  (k-1)/k · size       (size = operand ≈ result·k)
+    all-to-all      (k-1)/k · size
+    collective-permute  1.0 · size
+
+where k = replica-group size parsed from the op.  These are per-device bytes
+crossing links, which is what the ICI term wants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?|replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Total bytes of 'bf16[8,128]' or a tuple '(bf16[...], u32[...])'."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    """Replica-group size for a collective op line."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:  # iota format: [ngroups, group_size]
+        return max(1, int(m.group(2)))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    m = re.search(r"source_target_pairs=\{", line)
+    if m:
+        return 2
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind: dict
+    total_bytes: float          # effective per-device bytes over links
+    raw_bytes: float            # sum of result sizes (no traffic weighting)
+    count: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_kind: dict[str, dict] = {}
+    total = 0.0
+    raw = 0.0
+    count = 0
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # avoid double counting async start/done pairs
+        size = _shape_bytes(shape_str)
+        k = _group_size(line)
+        if kind == "all-reduce":
+            eff = 2.0 * (k - 1) / k * size
+        elif kind == "all-gather":
+            eff = (k - 1) / k * size
+        elif kind == "reduce-scatter":
+            eff = (k - 1) * size        # operand = result·k ⇒ (k-1)/k·(k·size)
+        elif kind == "all-to-all":
+            eff = (k - 1) / k * size
+        else:  # collective-permute
+            eff = size
+        d = by_kind.setdefault(kind, {"count": 0, "bytes": 0.0, "eff_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += size
+        d["eff_bytes"] += eff
+        total += eff
+        raw += size
+        count += 1
+    return CollectiveStats(by_kind, total, raw, count)
+
+
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _split_computations(hlo_text: str) -> tuple[dict[str, list[str]], str | None]:
+    """Split HLO text into {computation_name: [lines]}; returns entry name."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and "{" in line and ("->" in line or line.startswith(("ENTRY", "%"))):
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _line_collective(line: str):
+    m = _COLLECTIVE_RE.match(line)
+    if not m or "-done(" in line:
+        return None
+    size = _shape_bytes(m.group(1))
+    k = _group_size(line)
+    kind = m.group(2)
+    if kind == "all-reduce":
+        eff = 2.0 * (k - 1) / k * size
+    elif kind == "all-gather":
+        eff = (k - 1) / k * size
+    elif kind == "reduce-scatter":
+        eff = (k - 1) * size
+    elif kind == "all-to-all":
+        eff = (k - 1) / k * size
+    else:
+        eff = size
+    return kind, size, eff
+
+
+def parse_collectives_corrected(hlo_text: str) -> CollectiveStats:
+    """Collective stats with while-loop trip-count multipliers.
+
+    XLA annotates while ops with backend_config known_trip_count; we walk the
+    call graph from ENTRY multiplying body computations by their trip counts
+    (fusions/calls/conditional branches get ×1), so per-layer collectives
+    inside lax.scan are charged reps× — matching runtime behaviour.
+    """
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return parse_collectives(hlo_text)
+
+    # per-computation direct collectives and references
+    direct: dict[str, list] = {}
+    refs: dict[str, list[tuple[str, float]]] = {}
+    for name, lines in comps.items():
+        direct[name] = []
+        refs[name] = []
+        for line in lines:
+            got = _line_collective(line)
+            if got:
+                direct[name].append(got)
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trip = float(tm.group(1)) if tm else 1.0
+                refs[name].append((wm.group(2), trip))
+                refs[name].append((wm.group(1), trip))
+                continue
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    refs[name].append((b.strip().lstrip("%"), 1.0))
+            for cm in _CALL_RE.finditer(line):
+                refs[name].append((cm.group(1), 1.0))
+
+    # propagate multipliers (call graph is a DAG in HLO)
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for child, factor in refs.get(name, []):
+            visit(child, m * factor)
+
+    visit(entry, 1.0)
+
+    by_kind: dict[str, dict] = {}
+    total = raw = 0.0
+    count = 0
+    for name, items in direct.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for kind, size, eff in items:
+            d = by_kind.setdefault(kind, {"count": 0, "bytes": 0.0, "eff_bytes": 0.0})
+            d["count"] += int(m)
+            d["bytes"] += m * size
+            d["eff_bytes"] += m * eff
+            total += m * eff
+            raw += m * size
+            count += int(m)
+    return CollectiveStats(by_kind, total, raw, count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, chips: int,
+                   model_flops: float = 0.0) -> Roofline:
+    comp = flops / (chips * PEAK_FLOPS_BF16)
+    mem = bytes_accessed / (chips * HBM_BW)
+    coll = collective_bytes / (chips * ICI_BW)
+    dom = max((("compute", comp), ("memory", mem), ("collective", coll)),
+              key=lambda kv: kv[1])[0]
+    return Roofline(flops, bytes_accessed, collective_bytes, chips,
+                    comp, mem, coll, dom, model_flops,
+                    (model_flops / flops) if flops else 0.0)
+
+
+def model_flops_estimate(n_params_active: int, tokens: int, kind: str,
+                         zo: bool = True) -> float:
+    """'Useful' FLOPs convention: forward 2·N·D; FO train 6·N·D; ZO train
+    4·N·D (two forwards, no backward); decode/prefill 2·N·D."""
+    if kind == "train":
+        return (4.0 if zo else 6.0) * n_params_active * tokens
+    return 2.0 * n_params_active * tokens
+
+
+def fmt_seconds(s: float) -> str:
+    if s < 1e-6:
+        return f"{s * 1e9:.1f}ns"
+    if s < 1e-3:
+        return f"{s * 1e6:.1f}us"
+    if s < 1.0:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s:.3f}s"

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests run on the single host CPU device (the 512-device forcing lives ONLY
+# in repro.launch.dryrun, which is exercised via subprocess)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,89 @@
+"""Config registry: parameter counts must land on the billed model sizes."""
+import pytest
+
+from repro.configs import archs
+from repro.configs.base import INPUT_SHAPES
+from repro.models import transformer as tf
+
+# (arch, expected params, rel tolerance).  Expectations from the source
+# papers/model cards cited in each config.
+EXPECTED = {
+    "jamba-1.5-large-398b": (398e9, 0.10),
+    "qwen1.5-0.5b": (0.46e9, 0.15),
+    "tinyllama-1.1b": (1.1e9, 0.10),
+    "qwen2-72b": (72.7e9, 0.10),
+    "kimi-k2-1t-a32b": (1.0e12, 0.10),
+    "musicgen-medium": (1.5e9, 0.20),
+    "internvl2-26b": (20e9, 0.15),     # LM backbone only; ViT-6B stubbed
+    "falcon-mamba-7b": (7.3e9, 0.10),
+    "gemma3-1b": (1.0e9, 0.10),
+    "deepseek-v2-236b": (236e9, 0.10),
+}
+
+
+@pytest.mark.parametrize("name", archs.ASSIGNED)
+def test_param_count_matches_billed_size(name):
+    want, tol = EXPECTED[name]
+    got = tf.count_params(archs.get(name))
+    assert abs(got - want) / want < tol, f"{name}: {got/1e9:.2f}B vs {want/1e9:.2f}B"
+
+
+def test_all_assigned_archs_registered():
+    assert len(archs.ASSIGNED) == 10
+    for a in archs.ASSIGNED:
+        cfg = archs.get(a)
+        assert cfg.name == a
+        assert cfg.source, f"{a} must cite its source"
+
+
+def test_input_shapes_exact():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_layer_counts():
+    for name, n in [("jamba-1.5-large-398b", 72), ("qwen2-72b", 80),
+                    ("kimi-k2-1t-a32b", 61), ("deepseek-v2-236b", 60),
+                    ("falcon-mamba-7b", 64), ("gemma3-1b", 26)]:
+        assert archs.get(name).n_layers == n
+
+
+def test_jamba_interleave_ratio():
+    cfg = archs.get("jamba-1.5-large-398b")
+    slots = cfg.layer_cfgs()
+    n_attn = sum(s.mixer == "attn" for s in slots)
+    n_mamba = sum(s.mixer == "mamba" for s in slots)
+    assert n_mamba == 7 * n_attn                 # 1:7 interleave
+    n_moe = sum(s.ffn == "moe" for s in slots)
+    assert n_moe == len(slots) // 2              # MoE every other layer
+
+
+def test_gemma3_local_global_ratio():
+    slots = archs.get("gemma3-1b").layer_cfgs()
+    local = sum(s.attn.window is not None for s in slots)
+    glob = sum(s.attn.window is None for s in slots)
+    assert (local, glob) == (22, 4)              # 5:1 with remainder local
+
+
+def test_deepseek_mla_dims():
+    a = archs.get("deepseek-v2-236b").layer_cfgs()[0].attn
+    assert a.is_mla and a.kv_lora == 512 and a.q_lora == 1536
+    assert a.rope_head_dim == 64 and a.n_heads == 128
+
+
+def test_reduced_variants_are_small_but_same_family():
+    for name in archs.ASSIGNED:
+        cfg = archs.get(name)
+        red = archs.reduced(cfg)
+        assert red.n_layers <= 2
+        assert red.d_model <= 512
+        assert red.family == cfg.family
+        mixers = {s.mixer for s in cfg.layer_cfgs()}
+        red_mixers = {s.mixer for s in red.layer_cfgs()}
+        assert red_mixers <= mixers
+        if any(s.ffn == "moe" for s in cfg.layer_cfgs()):
+            moe_slots = [s for s in red.layer_cfgs() if s.ffn == "moe"]
+            assert moe_slots and all(s.moe.n_experts <= 4 for s in moe_slots)

@@ -1,0 +1,127 @@
+"""Data pipeline, checkpointing, optimizers, LoRA."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data import synthetic
+from repro.dtrain import lora as loralib
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.optim import sgd
+from repro.dtrain.runner import sim_arch
+
+
+def test_splits_deterministic_and_disjoint_sizes():
+    task = synthetic.TaskConfig(n_train=128, n_valid=50, n_test=100)
+    tr1, va1, te1 = synthetic.make_splits(task)
+    tr2, _, _ = synthetic.make_splits(task)
+    np.testing.assert_array_equal(tr1.tokens, tr2.tokens)
+    assert len(tr1) == 128 and len(va1) == 50 and len(te1) == 100
+    assert tr1.tokens.shape[1] == task.seq_len + 1
+
+
+def test_classify_labels_are_class_tokens():
+    task = synthetic.TaskConfig(n_train=64, vocab=256, n_classes=4)
+    tr, _, _ = synthetic.make_splits(task)
+    assert ((tr.labels >= 252) & (tr.labels < 256)).all()
+    np.testing.assert_array_equal(tr.tokens[:, -1], tr.labels)
+
+
+def test_partition_uniform_covers_everything():
+    task = synthetic.TaskConfig(n_train=128)
+    tr, _, _ = synthetic.make_splits(task)
+    parts = synthetic.partition(tr, 8)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 128 and len(set(allidx.tolist())) == 128
+    assert all(len(p) == 16 for p in parts)   # paper: even partition
+
+
+def test_partition_dirichlet_skews():
+    task = synthetic.TaskConfig(n_train=512)
+    tr, _, _ = synthetic.make_splits(task)
+    parts = synthetic.partition(tr, 4, scheme="dirichlet", dirichlet_alpha=0.1)
+    assert sum(len(p) for p in parts) == 512
+    sizes = sorted(len(p) for p in parts)
+    assert sizes[-1] > sizes[0]               # alpha=0.1 is very skewed
+
+
+def test_client_batch_stateless_reproducible():
+    task = synthetic.TaskConfig(n_train=64)
+    tr, _, _ = synthetic.make_splits(task)
+    parts = synthetic.partition(tr, 4)
+    b1 = synthetic.client_batch(tr, parts[2], 2, 7, 8)
+    b2 = synthetic.client_batch(tr, parts[2], 2, 7, 8)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = synthetic.client_batch(tr, parts[2], 2, 8, 8)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64)
+    params = tf.init_params(cfg, seed=3)
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt.save(path, params, {"step": 17})
+    loaded, meta = ckpt.load(path, like=params)
+    assert meta["step"] == 17
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(8, dtype=jnp.bfloat16) / 3}
+    path = os.path.join(tmp_path, "bf.npz")
+    ckpt.save(path, tree)
+    loaded, _ = ckpt.load(path, like=tree)
+    assert loaded["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(loaded["w"], jnp.float32),
+                                  np.asarray(tree["w"], jnp.float32))
+
+
+def test_checkpoint_mismatch_rejected(tmp_path):
+    path = os.path.join(tmp_path, "m.npz")
+    ckpt.save(path, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ckpt.load(path, like={"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_sgd_and_adam_descend_quadratic():
+    params = {"w": 3.0 * jnp.ones(8)}
+    loss = lambda p: 0.5 * jnp.sum(p["w"] ** 2)
+    g = jax.grad(loss)
+    st = sgd.sgd_init(params, momentum=0.9)
+    p = params
+    for _ in range(50):
+        p, st = sgd.sgd_update(p, g(p), st, lr=0.05, momentum=0.9)
+    assert float(loss(p)) < 0.05 * float(loss(params))
+
+    ast = sgd.adam_init(params)
+    p = params
+    for _ in range(100):
+        p, ast = sgd.adam_update(p, g(p), ast, lr=0.1)
+    assert float(loss(p)) < 0.05 * float(loss(params))
+
+
+def test_lora_spec_and_merge():
+    cfg = sim_arch(d_model=32, n_layers=2, n_heads=2, d_ff=64)
+    spec = tf.arch_spec(cfg)
+    lspec = loralib.lora_spec(spec, r=4)
+    n_l = loralib.n_lora_params(lspec)
+    assert 0 < n_l < 0.05 * plib.n_params(spec)
+    params = plib.init_params(spec, 0)
+    adapters = loralib.lora_init(lspec, 1)
+    merged = loralib.merge(params, adapters, alpha=16.0)
+    # B is zero-init => merge is identity initially
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    # make B nonzero -> wq changes, wk doesn't
+    adapters = jax.tree.map(lambda x: x + 0.1, adapters)
+    merged = loralib.merge(params, adapters, alpha=16.0)
+    assert not np.allclose(np.asarray(merged["g0"]["s0"]["wq"]),
+                           np.asarray(params["g0"]["s0"]["wq"]))
+    np.testing.assert_array_equal(np.asarray(merged["g0"]["s0"]["wk"]),
+                                  np.asarray(params["g0"]["s0"]["wk"]))

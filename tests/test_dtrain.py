@@ -1,0 +1,86 @@
+"""Decentralized runtime integration tests: SeedFlood == centralized ZO
+under full flooding, perfect consensus, byte-ledger ordering, delayed
+flooding, LoRA baselines."""
+import numpy as np
+import pytest
+
+from repro.dtrain.runner import DTrainConfig, run, sim_arch
+
+
+def _cfg(**kw):
+    base = dict(n_clients=4, topology="ring", steps=3, lr=1e-2, batch_size=4,
+                subcge_rank=8, local_iters=2,   # gossip rounds fire in-test
+                arch=sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64))
+    base.update(kw)
+    return DTrainConfig(**base)
+
+
+def test_seedflood_equals_central_zo_stepwise():
+    """Full flooding with identical seeds/batches reproduces centralized
+    n-perturbation ZO exactly (up to float association)."""
+    ra = run(_cfg(method="seedflood"))
+    rb = run(_cfg(method="central_zo"))
+    np.testing.assert_allclose(ra.loss_curve, rb.loss_curve,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_seedflood_perfect_consensus():
+    r = run(_cfg(method="seedflood", steps=5))
+    assert r.consensus_error < 1e-10
+
+
+def test_seedflood_bytes_are_tiny_and_exact():
+    r = run(_cfg(method="seedflood", steps=5))
+    # each step floods 4 messages over a 4-ring: per directed edge at most
+    # 4 msgs × 8 B; 5 steps × 2·|E|=8 directed edges
+    assert r.total_bytes <= 5 * 8 * 4 * 8
+    assert r.total_bytes > 0
+
+
+def test_ledger_ordering_matches_paper():
+    """bytes: dsgd ≫ dsgd_lora ≫ seedflood (paper Fig. 1 ordering)."""
+    rs = run(_cfg(method="seedflood", steps=4))
+    rl = run(_cfg(method="dsgd_lora", steps=4))
+    rd = run(_cfg(method="dsgd", steps=4))
+    assert rd.total_bytes > rl.total_bytes > rs.total_bytes
+    assert rd.total_bytes / max(rs.total_bytes, 1) > 1e3
+
+
+def test_delayed_flooding_diverges_then_converges():
+    """k=1 on a ring: clients see stale messages, so per-client params differ
+    transiently, but every message still arrives (bounded staleness)."""
+    r = run(_cfg(method="seedflood", flood_k=1, steps=6, n_clients=6))
+    assert r.extra["n_messages"] > 0
+    # staleness bound D/k = 3: all messages injected by step 2 must have
+    # arrived by the end; consensus error is small but nonzero mid-run —
+    # final gap only from the last ⌈D/k⌉ steps' in-flight messages
+    assert r.consensus_error < 1e-2
+
+
+def test_dzsgd_and_choco_run():
+    for m in ("dzsgd", "choco", "choco_lora", "dzsgd_lora"):
+        r = run(_cfg(method=m, steps=2))
+        assert np.isfinite(r.gmp) and r.total_bytes > 0
+
+
+def test_gossip_sr_compute_blowup_measured():
+    """§3.2: the strawman's reconstruction count grows superlinearly in t
+    (history reweighting), while SeedFlood applies each message once."""
+    r = run(_cfg(method="gossip_sr", steps=6, local_iters=2))
+    # 4 clients × 6 steps = 24 messages; reconstructions must exceed that
+    assert r.extra["reconstructions"] > 24
+
+
+def test_subspace_momentum_runs_and_descends():
+    """Beyond-paper: momentum in the r×r coefficient space (O(r²) state)
+    must run and not blow up; convergence advantage is demonstrated in
+    benchmarks (bench_output.txt momentum rows)."""
+    import numpy as np
+    r = run(_cfg(method="central_zo", steps=8, momentum=0.9, lr=1e-3))
+    assert np.isfinite(r.loss_curve).all()
+    assert np.isfinite(r.gmp)
+
+
+def test_unknown_method_raises():
+    with pytest.raises(KeyError):
+        run(_cfg(method="nope"))

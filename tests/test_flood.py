@@ -1,0 +1,111 @@
+"""Flooding protocol properties (paper §3.3): exactly-once delivery, full
+coverage within diameter rounds, fixed coefficients, delayed-flooding
+staleness bounds, byte accounting."""
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flood
+from repro.core.messages import Message, MESSAGE_BYTES
+from repro.topology import graphs
+
+
+def _inject_all(net, step=0):
+    for i in range(net.n):
+        net.inject(i, Message(seed=1000 + i, coef=0.5, origin=i, step=step))
+
+
+@pytest.mark.parametrize("topo,n", [("ring", 8), ("ring", 16),
+                                    ("meshgrid", 16), ("star", 9),
+                                    ("complete", 6), ("torus", 16)])
+def test_full_flood_coverage_exactly_once(topo, n):
+    net = flood.FloodNetwork(graphs.make(topo, n))
+    _inject_all(net)
+    fresh = net.full_flood()
+    for i in range(net.n):
+        # every client accepted every other client's message exactly once
+        assert len(fresh[i]) == n - 1
+        assert len({m.uid for m in fresh[i]}) == n - 1
+        assert len(net.states[i].seen) == n
+    # coefficients arrive unmodified (flooding never reweights)
+    assert all(m.coef == 0.5 for f in fresh for m in f)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(4, 24), st.integers(0, 10_000))
+def test_flood_on_random_connected_graphs(n, seed):
+    g = graphs.erdos_renyi(n, p=min(1.0, 2.5 * np.log(n) / n), seed=seed)
+    net = flood.FloodNetwork(g)
+    _inject_all(net)
+    net.rounds(net.diameter)
+    for uid in [(i, 0) for i in range(n)]:
+        assert net.coverage(uid) == n     # all-gather-equivalent consensus
+
+
+def test_coverage_grows_with_hops():
+    """A message spreads exactly one hop per round on a ring."""
+    n = 12
+    net = flood.FloodNetwork(graphs.ring(n))
+    net.inject(0, Message(seed=1, coef=1.0, origin=0, step=0))
+    cov = [net.coverage((0, 0))]
+    for _ in range(net.diameter):
+        net.round()
+        cov.append(net.coverage((0, 0)))
+    assert cov[0] == 1
+    for k in range(1, len(cov)):
+        assert cov[k] == min(n, 1 + 2 * k)   # spreads both directions
+
+
+def test_delayed_flooding_staleness_bound():
+    """With k hops/iteration, a message reaches everyone within ⌈D/k⌉
+    iterations (paper §4.5)."""
+    n, k = 16, 2
+    net = flood.FloodNetwork(graphs.ring(n))
+    D = net.diameter
+    bound = flood.staleness_bound(D, k)
+    net.inject(3, Message(seed=9, coef=1.0, origin=3, step=0))
+    iters = 0
+    while net.coverage((3, 0)) < n:
+        net.rounds(k)
+        iters += 1
+        assert iters <= bound + 1
+    assert iters <= bound
+
+
+def test_duplicate_suppression():
+    net = flood.FloodNetwork(graphs.complete(5))
+    _inject_all(net)
+    net.full_flood()
+    before = {i: len(net.states[i].seen) for i in range(5)}
+    fresh = net.rounds(3)            # nothing in flight -> nothing new
+    assert all(not f for f in fresh)
+    assert {i: len(net.states[i].seen) for i in range(5)} == before
+
+
+def test_byte_ledger_bounds():
+    """Total flood bytes ≤ 2·|E|·messages·MESSAGE_BYTES (each directed edge
+    carries each message at most once)."""
+    g = graphs.meshgrid(16)
+    net = flood.FloodNetwork(g)
+    _inject_all(net)
+    net.full_flood()
+    bound = flood.flood_bytes_per_iteration(g, 16)
+    assert 0 < net.ledger.total_bytes <= bound
+    assert net.ledger.per_edge == net.ledger.total_bytes / g.number_of_edges()
+
+
+def test_gossip_sr_history_cost_grows_linearly():
+    g = graphs.ring(8)
+    b10 = flood.gossip_sr_history_bytes(10, 8, g)
+    b20 = flood.gossip_sr_history_bytes(20, 8, g)
+    assert b20 == 2 * b10            # O(t·n) per §3.2
+
+
+def test_disconnected_graph_rejected():
+    g = nx.Graph()
+    g.add_nodes_from(range(4))
+    g.add_edge(0, 1)
+    g.add_edge(2, 3)
+    with pytest.raises(ValueError):
+        flood.FloodNetwork(g)

@@ -1,0 +1,73 @@
+"""Gossip baselines: mixing matrices, consensus decay, compression."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip
+from repro.topology import graphs
+
+
+@pytest.mark.parametrize("topo,n", [("ring", 8), ("meshgrid", 16), ("star", 6)])
+def test_metropolis_weights_doubly_stochastic(topo, n):
+    W = graphs.metropolis_weights(graphs.make(topo, n))
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    assert (W >= -1e-12).all()
+
+
+def test_spectral_gap_orders_topologies():
+    """Denser graphs mix faster: gap(complete) > gap(meshgrid) > gap(ring)."""
+    n = 16
+    gaps = {t: graphs.spectral_gap(graphs.metropolis_weights(graphs.make(t, n)))
+            for t in ("ring", "meshgrid", "complete")}
+    assert gaps["complete"] > gaps["meshgrid"] > gaps["ring"] > 0
+
+
+def test_mix_reduces_consensus_error():
+    rng = np.random.default_rng(0)
+    x0 = rng.normal(size=(8, 32)).astype(np.float32)
+    stacked = {"w": jnp.asarray(x0)}
+    W = graphs.metropolis_weights(graphs.ring(8))
+    e0 = float(gossip.consensus_error(stacked))
+    for _ in range(5):
+        stacked = gossip.mix(stacked, W)
+    e1 = float(gossip.consensus_error(stacked))
+    assert e1 < e0 * 0.9
+    # mean is preserved by doubly-stochastic mixing
+    np.testing.assert_allclose(np.asarray(stacked["w"]).mean(axis=0),
+                               x0.mean(axis=0), atol=1e-5)
+    for _ in range(200):
+        stacked = gossip.mix(stacked, W)
+    assert float(gossip.consensus_error(stacked)) < 1e-6
+
+
+def test_topk_compress_density():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 64)), jnp.float32)
+    c = gossip.topk_compress(x, density=0.01)
+    nz = int((np.asarray(c) != 0).sum())
+    k = max(1, int(64 * 64 * 0.01))
+    assert nz <= k + 8            # ties may add a few
+    # kept entries are the largest-magnitude ones
+    kept = np.abs(np.asarray(c)[np.asarray(c) != 0])
+    dropped = np.abs(np.asarray(x)[np.asarray(c) == 0])
+    assert kept.min() >= dropped.max() - 1e-6
+
+
+def test_choco_round_surrogates_track_params():
+    """With repeated rounds and a fixed target, surrogates converge to the
+    params (error feedback works)."""
+    rng = np.random.default_rng(2)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)}
+    W = graphs.metropolis_weights(graphs.ring(4))
+    state = gossip.choco_init({"w": jnp.zeros_like(params["w"])})
+    p = params
+    err0 = float(jnp.mean((state.x_hat["w"] - p["w"]) ** 2))
+    cons0 = float(gossip.consensus_error(p))
+    for _ in range(60):
+        p, state = gossip.choco_round(p, state, W, density=0.05,
+                                      consensus_lr=0.5)
+    err = float(jnp.mean((state.x_hat["w"] - p["w"]) ** 2))
+    cons = float(gossip.consensus_error(p))
+    assert err < 0.5 * err0          # surrogates track the params
+    assert cons < 0.25 * cons0       # compressed gossip still reaches consensus

@@ -1,0 +1,87 @@
+"""Auxiliary coverage: mesh helpers, roofline table generation, dry-run
+record schema, cost-model monotonicity."""
+import glob
+import json
+import os
+
+import jax
+import pytest
+
+from repro.configs import archs
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import mesh as meshlib
+from repro.roofline import cost_model
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def test_host_mesh_shapes():
+    m = meshlib.make_host_mesh(1, 1)
+    assert m.axis_names == ("data", "model")
+    assert meshlib.mesh_size(m) == 1
+    assert meshlib.data_axes(m) == ("data",)
+    assert meshlib.data_extent(m) == 1
+    with pytest.raises(ValueError):
+        meshlib.make_host_mesh(64, 64)
+
+
+def test_roofline_constants_are_v5e_class():
+    assert meshlib.PEAK_FLOPS_BF16 == 197e12
+    assert meshlib.HBM_BW == 819e9
+    assert meshlib.ICI_BW == 50e9
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(RESULTS, "*.json")),
+                    reason="dry-run results not present")
+def test_dryrun_records_schema_and_coverage():
+    """The recorded baseline must cover all 10 archs × 4 shapes × 2 meshes
+    with the §Roofline fields present."""
+    recs = [json.load(open(f)) for f in glob.glob(os.path.join(RESULTS, "*.json"))]
+    ok = [r for r in recs if "error" not in r]
+    combos = {(r["arch"], r["shape"], r["mesh"] if isinstance(r["mesh"], str)
+               else "x".join(map(str, r["mesh"]))) for r in ok}
+    assert len(combos) >= 80, f"only {len(combos)} dry-run records"
+    for r in ok[:5]:
+        roof = r["roofline"]
+        for k in ("compute_s", "memory_s", "collective_s", "dominant",
+                  "useful_ratio"):
+            assert k in roof
+        assert r["resident_bytes_per_device"] > 0
+        assert r["chips"] in (256, 512)
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(RESULTS, "*.json")),
+                    reason="dry-run results not present")
+def test_roofline_markdown_generates():
+    from benchmarks import roofline_table
+    recs = roofline_table.load(RESULTS)
+    md = roofline_table.roofline_markdown(recs)
+    assert md.count("\n") >= 40
+    assert "dominant" in md
+    rows = roofline_table.csv_rows(recs)
+    assert len(rows) >= 80
+
+
+def test_cost_model_monotonic_in_tokens():
+    cfg = archs.get("tinyllama-1.1b")
+    s4k = INPUT_SHAPES["train_4k"]
+    half = cost_model.forward_cost(cfg, s4k.global_batch, s4k.seq // 2,
+                                   s4k.seq // 2)
+    full = cost_model.forward_cost(cfg, s4k.global_batch, s4k.seq, s4k.seq)
+    assert full.flops > 1.9 * half.flops     # superlinear (attention)
+    assert full.bytes > half.bytes
+
+
+def test_cost_model_decode_is_memory_lean_on_ssm():
+    """Attention-free decode reads params once; its bytes dwarf its flops."""
+    cfg = archs.get("falcon-mamba-7b")
+    c = cost_model.step_cost(cfg, INPUT_SHAPES["decode_32k"], "decode")
+    intensity = c.flops / c.bytes
+    assert intensity < 150                     # memory-bound regime
+
+
+def test_fo_train_costs_more_than_zo():
+    cfg = archs.get("qwen1.5-0.5b")
+    zo_c = cost_model.step_cost(cfg, INPUT_SHAPES["train_4k"], "train")
+    fo_c = cost_model.step_cost(cfg, INPUT_SHAPES["train_4k"], "train_dsgd")
+    assert fo_c.flops > 1.3 * zo_c.flops       # 3 fwd-equiv vs 2 fwd + update

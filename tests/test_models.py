@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+reduced same-family variant, runs a forward + one ZO train-ish step on CPU
+with shape and NaN assertions; plus prefill+decode == full-forward
+consistency for every family's cache machinery."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import archs
+from repro.configs.base import INPUT_SHAPES
+from repro.core import subcge
+from repro.core.subcge import SubCGEConfig
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.models.perturb import nest_subspace, sample_pert
+
+SCFG = SubCGEConfig(rank=4, refresh_period=50)
+
+
+def _setup(name):
+    cfg = archs.reduced(archs.get(name))
+    spec = tf.arch_spec(cfg)
+    params = plib.init_params(spec, 0)
+    return cfg, spec, params
+
+
+def _batch(cfg, B=2, T=16, key=0):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(key), (B, T),
+                                          0, cfg.vocab)}
+    if cfg.frontend is not None:
+        batch["embeds"] = jax.random.normal(
+            jax.random.PRNGKey(key + 1),
+            (B, cfg.frontend.n_embeds, cfg.frontend.embed_dim))
+    return batch
+
+
+@pytest.mark.parametrize("name", archs.ASSIGNED)
+def test_smoke_forward_shapes_no_nans(name):
+    cfg, spec, params = _setup(name)
+    B, T = 2, 16
+    batch = _batch(cfg, B, T)
+    logits, _, aux = tf.forward(cfg, params, batch)
+    P = cfg.frontend.n_embeds if cfg.frontend else 0
+    assert logits.shape == (B, T + P, cfg.vocab)
+    assert not np.isnan(np.asarray(logits)).any()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", archs.ASSIGNED)
+def test_smoke_one_zo_train_step(name):
+    """One full SeedFlood-style update: dual forward + SubCGE aggregation.
+    Params must change, stay finite, and the loss must be finite."""
+    cfg, spec, params = _setup(name)
+    meta = plib.subcge_meta(spec)
+    batch = _batch(cfg)
+    sub_flat = subcge.subspace_at_step(meta, SCFG, 3, 0)
+    sub = nest_subspace(sub_flat)
+
+    seeds_t = jnp.asarray([101, 202], jnp.uint32)   # 2 clients
+    alphas = []
+    for s in seeds_t:
+        pert = sample_pert(meta, SCFG, s, SCFG.eps)
+        lp = tf.lm_loss(cfg, params, batch, sub=sub, pert=pert)
+        lm = tf.lm_loss(cfg, params, batch, sub=sub,
+                        pert=pert.with_scale(-SCFG.eps))
+        assert np.isfinite(float(lp)) and np.isfinite(float(lm))
+        alphas.append((lp - lm) / (2 * SCFG.eps))
+    coefs = -1e-3 * jnp.asarray(alphas) / 2
+    new = subcge.apply_messages(params, meta, SCFG, sub_flat, seeds_t, coefs)
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)))
+    assert changed
+    for leaf in jax.tree.leaves(new):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("name", archs.ASSIGNED)
+def test_prefill_decode_matches_full_forward(name):
+    cfg, spec, params = _setup(name)
+    B, T = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T + 1), 0, cfg.vocab)
+    full = {"tokens": toks}
+    P = 0
+    if cfg.frontend is not None:
+        emb = jax.random.normal(jax.random.PRNGKey(2),
+                                (B, cfg.frontend.n_embeds,
+                                 cfg.frontend.embed_dim))
+        full["embeds"] = emb
+        P = cfg.frontend.n_embeds
+    ref, _, _ = tf.forward(cfg, params, full)
+
+    cache = tf.init_cache(cfg, B, capacity=P + T + 1, dtype=jnp.float32)
+    pre = {"tokens": toks[:, :T]}
+    if P:
+        pre["embeds"] = emb
+    lg1, cache, _ = tf.forward(cfg, params, pre, cache=cache, pos=0)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(ref[:, :P + T]),
+                               rtol=2e-4, atol=2e-4)
+    lg2, cache, _ = tf.forward(cfg, params, {"tokens": toks[:, T:]},
+                               cache=cache, pos=P + T)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]), np.asarray(ref[:, -1]),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_sliding_window_variant_changes_only_windows():
+    cfg = archs.get("qwen2-72b")
+    sw = cfg.with_sliding_window(4096)
+    assert sw.n_layers == cfg.n_layers
+    for s in sw.layer_cfgs():
+        assert s.attn.window == 4096
+    # gemma3 keeps its tighter local windows
+    g3 = archs.get("gemma3-1b").with_sliding_window(4096)
+    wins = {s.attn.window for s in g3.layer_cfgs()}
+    assert wins == {512, 4096}
+
+
+def test_for_shape_applies_sliding_window_on_long_decode():
+    long = INPUT_SHAPES["long_500k"]
+    dense = archs.get("tinyllama-1.1b").for_shape(long)
+    assert all(s.attn.window == 4096 for s in dense.layer_cfgs())
+    native = archs.get("falcon-mamba-7b").for_shape(long)
+    assert native.name == "falcon-mamba-7b"      # untouched
+
+
+def test_perturbed_forward_scale_zero_is_identity():
+    cfg, spec, params = _setup("tinyllama-1.1b")
+    meta = plib.subcge_meta(spec)
+    batch = _batch(cfg)
+    sub = nest_subspace(subcge.subspace_at_step(meta, SCFG, 0, 0))
+    pert = sample_pert(meta, SCFG, jnp.uint32(9), 0.0)
+    a, _, _ = tf.forward(cfg, params, batch)
+    b, _, _ = tf.forward(cfg, params, batch, sub=sub, pert=pert)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_fused_rank1_equals_materialized_perturbation():
+    """The fused x·W + s(x·u)v^T path must equal forwarding through
+    explicitly perturbed weights (materialize_z) — the core correctness of
+    the production forward."""
+    cfg, spec, params = _setup("qwen1.5-0.5b")
+    meta = plib.subcge_meta(spec)
+    batch = _batch(cfg)
+    sub_flat = subcge.subspace_at_step(meta, SCFG, 1, 0)
+    eps = 1e-2
+    pert = sample_pert(meta, SCFG, jnp.uint32(77), eps)
+    fused = tf.lm_loss(cfg, params, batch, sub=nest_subspace(sub_flat),
+                       pert=pert)
+    z = subcge.materialize_z(params, meta, SCFG, sub_flat, jnp.uint32(77))
+    pmat = jax.tree.map(lambda p, zz: p + eps * zz.astype(p.dtype), params, z)
+    mat = tf.lm_loss(cfg, pmat, batch)
+    np.testing.assert_allclose(float(fused), float(mat), rtol=2e-4)

@@ -1,0 +1,148 @@
+"""SubCGE: subspace structure, canonical-coordinate perturbations, and the
+O(n + r·d) vectorized aggregation (paper §3.4, eq. 9-10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import seeds, subcge, zo
+from repro.core.subcge import SubCGEConfig
+
+
+def _params():
+    return {
+        "blk": {"w": jnp.zeros((3, 16, 24)), "scale": jnp.zeros((3, 16)),
+                "bias": jnp.zeros((24,))},
+        "moe": {"we": jnp.zeros((2, 4, 8, 12))},
+        "emb": jnp.zeros((64, 16)),
+    }
+
+
+def _meta(params):
+    def nb(path, leaf):
+        if path == "blk/w":
+            return 1
+        if path == "blk/scale":
+            return 1
+        if path == "moe/we":
+            return 2
+        return 0
+    return subcge.infer_meta(params, n_batch_dims_fn=nb)
+
+
+CFG = SubCGEConfig(rank=5, refresh_period=10, eps=1e-3)
+
+
+def test_meta_classification():
+    params = _params()
+    meta = _meta(params)
+    assert meta["blk/w"].is_matrix and meta["blk/w"].batch_shape == (3,)
+    assert not meta["blk/scale"].is_matrix          # stacked vector
+    assert not meta["blk/bias"].is_matrix
+    assert meta["moe/we"].is_matrix and meta["moe/we"].batch_shape == (2, 4)
+    assert meta["emb"].is_matrix and meta["emb"].batch_shape == ()
+
+
+def test_subspace_identical_across_clients():
+    """Any client regenerating at the same (seed, step) gets bitwise-equal
+    U/V — globally shared subspaces with zero communication."""
+    meta = _meta(_params())
+    s1 = subcge.subspace_at_step(meta, CFG, 42, 13)
+    s2 = subcge.subspace_at_step(meta, CFG, 42, 17)    # same refresh window
+    s3 = subcge.subspace_at_step(meta, CFG, 42, 23)    # next window
+    for p in s1:
+        np.testing.assert_array_equal(np.asarray(s1[p].U), np.asarray(s2[p].U))
+    assert not np.array_equal(np.asarray(s1["emb"].U), np.asarray(s3["emb"].U))
+
+
+def test_perturbation_is_canonical_rank1():
+    """z_ℓ must be exactly U[:,i] V[:,j]^T for some (i,j) per instance."""
+    params = _params()
+    meta = _meta(params)
+    sub = subcge.subspace_at_step(meta, CFG, 0, 0)
+    z = subcge.materialize_z(params, meta, CFG, sub, jnp.uint32(99))
+    zw = np.asarray(z["emb"])
+    assert np.linalg.matrix_rank(zw) == 1
+    U, V = np.asarray(sub["emb"].U), np.asarray(sub["emb"].V)
+    # find the matching coordinate
+    coords = subcge.sample_coords(meta, CFG, jnp.uint32(99))["emb"]
+    want = np.outer(U[:, int(coords.i)], V[:, int(coords.j)])
+    np.testing.assert_allclose(zw, want, rtol=1e-6)
+
+
+def test_scatter_A_batched():
+    i = jnp.array([[0, 1], [2, 1], [0, 1]])      # (K=3, B=2)
+    j = jnp.array([[1, 1], [2, 1], [1, 0]])
+    coefs = jnp.array([1.0, 10.0, 100.0])
+    A = subcge.scatter_A(i, j, coefs, rank=3)
+    assert A.shape == (2, 3, 3)
+    assert float(A[0, 0, 1]) == 101.0            # k=0 and k=2 hit (0,(0,1))
+    assert float(A[0, 2, 2]) == 10.0
+    assert float(A[1, 1, 1]) == 11.0
+    assert float(A[1, 1, 0]) == 100.0
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 9), st.integers(0, 2 ** 31 - 1))
+def test_apply_messages_equals_sequential(K, seed0):
+    """Vectorized aggregation (scatter + U A V^T) == replaying each message
+    individually — the eq. 10 equivalence, property-tested."""
+    params = _params()
+    meta = _meta(params)
+    sub = subcge.subspace_at_step(meta, CFG, 1, 0)
+    seeds_k = jnp.asarray(
+        np.random.default_rng(seed0).integers(0, 2 ** 31, size=K), jnp.uint32)
+    coefs = jnp.asarray(np.random.default_rng(seed0 + 1).normal(size=K),
+                        jnp.float32)
+    fast = subcge.apply_messages(params, meta, CFG, sub, seeds_k, coefs)
+    slow = params
+    for s, c in zip(seeds_k, coefs):
+        z = subcge.materialize_z(params, meta, CFG, sub, s)
+        slow = zo.tree_add_scaled(slow, z, c)
+    for a, b in zip(jax.tree.leaves(fast), jax.tree.leaves(slow)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_frozen_leaves_untouched():
+    params = _params()
+    meta = subcge.infer_meta(params, frozen_fn=lambda p: p == "emb")
+    sub = subcge.subspace_at_step(meta, CFG, 0, 0)
+    out = subcge.apply_messages(params, meta, CFG, sub,
+                                jnp.asarray([5], jnp.uint32),
+                                jnp.asarray([2.0], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out["emb"]),
+                                  np.asarray(params["emb"]))
+    assert not np.array_equal(np.asarray(out["blk"]["w"]),
+                              np.asarray(params["blk"]["w"]))
+
+
+def test_buffer_mode_equals_direct_apply():
+    """Appendix A: accumulate into A_ℓ, fold on demand == direct update."""
+    params = _params()
+    meta = _meta(params)
+    # buffer path covers matrix leaves; restrict comparison to those
+    sub = subcge.subspace_at_step(meta, CFG, 0, 0)
+    seeds_k = jnp.asarray([11, 22, 33], jnp.uint32)
+    coefs = jnp.asarray([0.5, -1.5, 2.0], jnp.float32)
+
+    direct = subcge.apply_messages(params, meta, CFG, sub, seeds_k, coefs)
+    bufs = subcge.zero_buffers(meta, CFG)
+    bufs = subcge.accumulate_buffers(bufs, meta, CFG, seeds_k[:2], coefs[:2])
+    bufs = subcge.accumulate_buffers(bufs, meta, CFG, seeds_k[2:], coefs[2:])
+    folded = subcge.fold_buffers(params, meta, sub, bufs)
+    for p in ("blk/w", "moe/we", "emb"):
+        a = folded
+        b = direct
+        for k in p.split("/"):
+            a, b = a[k], b[k]
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_refresh_period_windows():
+    assert int(subcge.refresh_step(0, CFG)) == 0
+    assert int(subcge.refresh_step(9, CFG)) == 0
+    assert int(subcge.refresh_step(10, CFG)) == 10
+    assert int(subcge.refresh_step(25, CFG)) == 20
