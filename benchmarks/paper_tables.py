@@ -11,6 +11,13 @@ Mapping to the paper:
   table4_runtime_breakdown Table 4   — GE vs MA phase wall-clock
   table8_cost_ledger       Table 8   — analytic per-edge cost at paper scale
                                        (OPT-1.3B, 16 clients) vs paper values
+
+Beyond-paper benchmarks:
+  beyond_subspace_momentum — momentum in the r×r coefficient space
+  beyond_vector_flood      — bitset flood engine vs per-message reference
+                             at n=256 clients (DESIGN.md §6)
+  beyond_churn_recovery    — consensus after leave+rejoin churn, SeedFlood
+                             (anti-entropy) vs gossip
 """
 from __future__ import annotations
 
@@ -244,6 +251,52 @@ def table8_cost_ledger(fast: bool = True):
     return rows
 
 
+def beyond_vector_flood(fast: bool = True):
+    """Bitset flood engine vs the per-message reference: one full flood of n
+    messages on an n-client meshgrid (the n=256 sweep-enabling fast path)."""
+    from repro.core import flood
+    from repro.core.messages import Message
+
+    rows = []
+    for n in ([64, 256] if fast else [64, 256, 1024]):
+        g = graphs.meshgrid(n)
+        times = {}
+        for backend in ("python", "numpy"):
+            net = flood.make_network(g, backend=backend)
+            for i in range(n):
+                net.inject(i, Message(seed=1000 + i, coef=0.5, origin=i,
+                                      step=0))
+            t0 = time.perf_counter()
+            payloads = net.rounds_arrays(net.diameter + 1)
+            times[backend] = time.perf_counter() - t0
+            assert all(len(p[0]) == n - 1 for p in payloads)
+        rows.append((f"beyond/vector_flood/n={n}",
+                     f"{times['python'] / times['numpy']:.1f}",
+                     f"speedup_x python_ms={times['python']*1e3:.1f} "
+                     f"numpy_ms={times['numpy']*1e3:.1f}"))
+    return rows
+
+
+def beyond_churn_recovery(fast: bool = True):
+    """Leave+rejoin churn on a meshgrid: SeedFlood's anti-entropy restores
+    exact consensus; gossip's consensus error persists (DESIGN.md §6)."""
+    from repro.topology.dynamic import ChurnSchedule
+
+    n = 16 if fast else 64
+    steps = 24 if fast else 60
+    churn = ChurnSchedule.leave_rejoin(
+        tuple(range(0, n, 4)), steps // 4, 3 * steps // 4)
+    rows = []
+    for method in ("seedflood", "dzsgd"):
+        r = run(_base_cfg(fast, method=method, n_clients=n,
+                          topology="meshgrid", steps=steps, churn=churn,
+                          local_iters=2))
+        rows.append((f"beyond/churn/{method}", f"{r.consensus_error:.3e}",
+                     f"gmp={r.gmp:.4f} "
+                     f"recovered={'yes' if r.consensus_error < 1e-8 else 'no'}"))
+    return rows
+
+
 ALL = {
     "fig1_comm_vs_perf": fig1_comm_vs_perf,
     "table2_client_scaling": table2_client_scaling,
@@ -254,4 +307,6 @@ ALL = {
     "table4_runtime_breakdown": table4_runtime_breakdown,
     "table8_cost_ledger": table8_cost_ledger,
     "beyond_subspace_momentum": beyond_subspace_momentum,
+    "beyond_vector_flood": beyond_vector_flood,
+    "beyond_churn_recovery": beyond_churn_recovery,
 }

@@ -1,0 +1,70 @@
+"""Churn recovery (DESIGN.md §6): the dynamic-topology headline experiment.
+
+A meshgrid of 64 clients trains decentralized; mid-run a block of clients
+drops offline (taking their in-flight frontiers with them) and later
+rejoins.  SeedFlood recovers via anti-entropy catch-up — rejoined clients
+pull exactly the seed-scalar messages they missed and every client's
+parameters re-coincide.  The gossip baseline has no such mechanism: its
+consensus error jumps on rejoin and only decays at the gossip mixing rate.
+
+    PYTHONPATH=src python examples/churn_recovery.py
+    PYTHONPATH=src python examples/churn_recovery.py --clients 16 --steps 12
+"""
+import argparse
+
+from repro.core.messages import fmt_bytes
+from repro.dtrain.runner import DTrainConfig, run, sim_arch
+from repro.topology.dynamic import ChurnSchedule
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--clients", type=int, default=64)
+    p.add_argument("--steps", type=int, default=40)
+    p.add_argument("--leave-frac", type=float, default=0.125,
+                   help="fraction of clients that churn out")
+    p.add_argument("--eval-every", type=int, default=5)
+    args = p.parse_args()
+
+    if not 0.0 < args.leave_frac < 1.0:
+        raise SystemExit("--leave-frac must be in (0, 1): some clients must "
+                         "churn and some must stay to sync them back in")
+    n = args.clients
+    leave_at = args.steps // 4
+    rejoin_at = 3 * args.steps // 4
+    churned = tuple(range(0, n, max(1, int(1 / args.leave_frac))))[:max(1, int(n * args.leave_frac))]
+    churn = ChurnSchedule.leave_rejoin(churned, leave_at, rejoin_at)
+    print(f"{n} clients on a meshgrid; clients {list(churned)} leave at "
+          f"t={leave_at}, rejoin (anti-entropy catch-up) at t={rejoin_at}\n")
+
+    arch = sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64)
+    common = dict(n_clients=n, topology="meshgrid", steps=args.steps, lr=3e-3,
+                  batch_size=8, subcge_rank=16, local_iters=2,
+                  eval_every=args.eval_every, churn=churn, arch=arch)
+
+    sf = run(DTrainConfig(method="seedflood", flood_backend="numpy", **common))
+    dz = run(DTrainConfig(method="dzsgd", **common))
+
+    print(f"{'step':>6} {'seedflood consensus':>20} {'dzsgd consensus':>20}")
+    for (t, e_sf), (_, e_dz) in zip(sf.extra["consensus_curve"],
+                                    dz.extra["consensus_curve"]):
+        marker = ""
+        if t > leave_at and t <= rejoin_at:
+            marker = "  <- churned out"
+        elif t > rejoin_at:
+            marker = "  <- recovered"
+        print(f"{t:>6} {e_sf:>20.3e} {e_dz:>20.3e}{marker}")
+
+    print(f"\nfinal consensus: seedflood {sf.consensus_error:.3e} "
+          f"(params re-coincide) vs dzsgd {dz.consensus_error:.3e}")
+    print(f"final GMP:       seedflood {sf.gmp:.3f} vs dzsgd {dz.gmp:.3f}")
+    print(f"comm total:      seedflood {fmt_bytes(sf.total_bytes)} "
+          f"(anti-entropy {fmt_bytes(sf.extra['sync_bytes'])} across "
+          f"{sf.extra['n_syncs']} syncs) vs dzsgd {fmt_bytes(dz.total_bytes)}")
+    if sf.consensus_error < 1e-8 <= dz.consensus_error:
+        print("\nSeedFlood recovered exact consensus after churn; "
+              "gossip did not.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,23 @@
 """Quickstart: decentralized SeedFlood fine-tuning of a tiny decoder on a
 ring of 8 clients, vs the DZSGD gossip baseline.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--steps 120]
 """
+import argparse
+
 from repro.core.messages import fmt_bytes
 from repro.dtrain.runner import DTrainConfig, run, sim_arch
 
 
 def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=120,
+                   help="training steps (lower for a CI smoke run)")
+    args = p.parse_args()
+
     arch = sim_arch(d_model=48, n_layers=2, n_heads=4, d_ff=96)
     from repro.data.synthetic import TaskConfig
-    common = dict(n_clients=8, topology="ring", steps=120, lr=3e-3,
+    common = dict(n_clients=8, topology="ring", steps=args.steps, lr=3e-3,
                   batch_size=16, subcge_rank=32, arch=arch,
                   task=TaskConfig(vocab=256, seq_len=16, concentration=0.02))
 

@@ -142,6 +142,29 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Declarative churn spec for decentralized runs (DESIGN.md §6).
+
+    Plain data (serializable, hashable) so sweeps and benchmark tables can
+    carry churn settings; ``repro.topology.dynamic.ChurnSchedule.from_config``
+    resolves it into the concrete event script.  ``leave_at``/``rejoin_at``
+    double as down/up (link_flap) and at/heal (partition) steps.
+    """
+    kind: str = "leave_rejoin"         # leave_rejoin | link_flap | partition | random
+    nodes: tuple[int, ...] = ()        # leave_rejoin
+    leave_at: int = 0
+    rejoin_at: int = 0
+    edges: tuple[tuple[int, int], ...] = ()          # link_flap
+    groups: tuple[tuple[int, ...], ...] = ()         # partition
+    n: int = 0                         # random: client count
+    steps: int = 0                     # random: horizon
+    rate: float = 0.0                  # random: per-step leave probability
+    seed: int = 0
+    outage: tuple[int, int] = (5, 15)  # random: offline duration range
+    max_concurrent: int = 1            # random: max simultaneous departures
+
+
+@dataclasses.dataclass(frozen=True)
 class InputShape:
     name: str
     seq: int

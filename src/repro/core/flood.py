@@ -10,8 +10,25 @@ The same machinery implements **delayed flooding** (paper §4.5): run only
 ``k`` rounds per local iteration and let the frontier sets ``R_i`` carry over
 to the next iteration, bounding staleness by ⌈D/k⌉.
 
-This module is deliberately pure-Python + networkx: it is the *protocol*
-layer of the simulator, where per-message bookkeeping is the whole point.
+Beyond the paper, the network is **churn-tolerant** (DESIGN.md §6): topology
+is mutable mid-run via ``repro.topology.dynamic`` — nodes leave (dropping
+their frontiers) and rejoin, links fail and recover, partitions open and
+heal.  Recovery is an *anti-entropy* sync: across every edge a rejoin or
+link-restore revives, the two endpoints exchange seen-set digests and
+re-send exactly the seed-scalar messages the other side missed.  Re-sent
+messages enter the receiver's frontier and re-flood outward; duplicates are
+filtered by ``S_i``, so coefficients still arrive exactly once and unchanged
+— churn never breaks the fixed-coefficient property.
+
+Two engines implement the same protocol:
+
+* ``FloodNetwork``       — the pure-Python reference, where per-message
+  bookkeeping is the whole point (readable, property-tested).
+* ``VectorFloodNetwork`` — a numpy *bitset* engine: seen/frontier sets are
+  packed bit matrices, a flood round is a handful of vectorized OR/AND-NOT
+  ops, and newly accepted messages come back as index arrays.  This is what
+  makes n=256-client meshgrid sweeps tractable (≳10× over the reference).
+
 The pod runtime (repro/launch) maps the end-to-end effect of a full flood
 onto a single all-gather instead (see DESIGN.md §3).
 """
@@ -21,42 +38,127 @@ import dataclasses
 from typing import Iterable
 
 import networkx as nx
+import numpy as np
 
-from repro.core.messages import Message, CommLedger, MESSAGE_BYTES
+from repro.core.messages import (Message, CommLedger, MESSAGE_BYTES,
+                                 digest_bytes)
+from repro.topology.dynamic import ChurnEvent, DynamicTopology
+
+
+#: ``make_network(backend="auto")`` switches to the bitset engine at this size.
+AUTO_VECTOR_MIN_CLIENTS = 64
 
 
 @dataclasses.dataclass
 class ClientFloodState:
     seen: set            # S_i — uids of every message ever accepted
     frontier: list       # R_i — messages to forward on the next round
+    store: dict          # uid -> Message, for anti-entropy re-send
 
     @classmethod
     def empty(cls) -> "ClientFloodState":
-        return cls(seen=set(), frontier=[])
+        return cls(seen=set(), frontier=[], store={})
 
 
-class FloodNetwork:
-    """Message-passing state for one decentralized run."""
+@dataclasses.dataclass
+class SyncReport:
+    """Anti-entropy accounting for one ``apply_churn`` call."""
+    syncs: int = 0            # pairwise digest exchanges performed
+    transferred: int = 0      # messages re-sent to close the set difference
 
-    def __init__(self, graph: nx.Graph):
-        if not nx.is_connected(graph):
-            raise ValueError("SeedFlood assumes a connected communication graph")
-        self.graph = graph
-        self.n = graph.number_of_nodes()
-        self.neighbors = [sorted(graph.neighbors(i)) for i in range(self.n)]
-        self.diameter = nx.diameter(graph)
+
+def _as_topology(graph) -> DynamicTopology:
+    if isinstance(graph, DynamicTopology):
+        return graph
+    return DynamicTopology(graph)
+
+
+class _FloodBase:
+    """Topology plumbing + churn entry point shared by both engines."""
+
+    def __init__(self, graph):
+        self.topo = _as_topology(graph)
+        self.graph = self.topo.base_graph
+        self.n = self.topo.n
+        self.ledger = CommLedger(n_edges=self.graph.number_of_edges())
+
+    @property
+    def neighbors(self) -> list[list[int]]:
+        return self.topo.neighbors()
+
+    @property
+    def diameter(self) -> int:
+        """Effective diameter of the *current* topology (max over live
+        components) — the flood-rounds budget for full coverage."""
+        return max(self.topo.effective_diameter(), 1)
+
+    def active_mask(self) -> np.ndarray:
+        return self.topo.active_mask()
+
+    # -- churn ----------------------------------------------------------------
+
+    def apply_churn(self, events: Iterable[ChurnEvent]) -> SyncReport:
+        """Apply topology mutations; departed nodes drop their frontiers,
+        rejoined nodes and restored links run anti-entropy.
+
+        A rejoin syncs across *every* revived live edge, not just one
+        neighbour: if the departure had cut the surviving graph, the
+        rejoining node is the bridge, and each of its edges may face a
+        different component whose messages the others never saw.
+        """
+        delta = self.topo.apply_events(events)
+        report = SyncReport()
+        for i in delta.left:
+            self._drop_frontier(i)
+        synced: set[frozenset] = set()
+        neighbors = self.topo.neighbors()
+        for i, _ in delta.joined:
+            for j in neighbors[i]:
+                if frozenset((i, j)) not in synced:
+                    synced.add(frozenset((i, j)))
+                    self._anti_entropy(i, j, report)
+        for u, v in delta.restored:
+            if self.topo.is_active(u) and self.topo.is_active(v) \
+                    and frozenset((u, v)) not in synced:
+                synced.add(frozenset((u, v)))
+                self._anti_entropy(u, v, report)
+        return report
+
+    def drain_catchup(self) -> list[list[Message]]:
+        """Messages each client gained via anti-entropy since the last drain
+        (the runner applies these like freshly flooded messages)."""
+        out = self._catchup
+        self._catchup = [[] for _ in range(self.n)]
+        return out
+
+    # engine hooks
+    def _drop_frontier(self, i: int) -> None:
+        raise NotImplementedError
+
+    def _anti_entropy(self, a: int, b: int, report: SyncReport) -> None:
+        raise NotImplementedError
+
+
+class FloodNetwork(_FloodBase):
+    """Reference per-message engine for one decentralized run."""
+
+    def __init__(self, graph):
+        super().__init__(graph)
         self.states = [ClientFloodState.empty() for _ in range(self.n)]
-        self.ledger = CommLedger(n_edges=graph.number_of_edges())
+        self._catchup: list[list[Message]] = [[] for _ in range(self.n)]
 
     # -- Algorithm 1: R_i = R_i ∪ {(s_{i,t}, η α / n)} ------------------------
     def inject(self, client: int, msg: Message) -> None:
         """A client's freshly generated update enters its own frontier (it has
         already applied it locally — Algorithm 1 applies the local update in
         block (B) and floods it in block (C))."""
+        if not self.topo.is_active(client):
+            raise ValueError(f"client {client} is offline")
         st = self.states[client]
         if msg.uid in st.seen:
             raise ValueError(f"duplicate injection of {msg.uid}")
         st.seen.add(msg.uid)
+        st.store[msg.uid] = msg
         st.frontier.append(msg)
 
     # -- one synchronous flood round ------------------------------------------
@@ -67,13 +169,14 @@ class FloodNetwork:
         (already deduplicated against S_i) — the runner applies exactly these,
         each exactly once, which is the fixed-coefficient property.
         """
+        neighbors = self.neighbors
         inboxes: list[list[Message]] = [[] for _ in range(self.n)]
         for i in range(self.n):
             st = self.states[i]
             if not st.frontier:
                 continue
             payload = len(st.frontier) * MESSAGE_BYTES
-            for j in self.neighbors[i]:
+            for j in neighbors[i]:
                 inboxes[j].extend(st.frontier)
                 self.ledger.send(payload, count=len(st.frontier))
             st.frontier = []
@@ -85,6 +188,7 @@ class FloodNetwork:
                 if msg.uid in st.seen:
                     continue  # R_i = R_i \ S_i
                 st.seen.add(msg.uid)  # S_i = R_i ∪ S_i
+                st.store[msg.uid] = msg
                 st.frontier.append(msg)
                 fresh[i].append(msg)
         self.ledger.rounds += 1
@@ -102,10 +206,42 @@ class FloodNetwork:
                 fresh[i].extend(got[i])
         return fresh
 
+    def rounds_arrays(self, k: int) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Like :meth:`rounds` but returns per-client (seeds, coefs) arrays —
+        the payload shape the training runner consumes."""
+        fresh = self.rounds(k)
+        return [(np.asarray([m.seed for m in f], np.uint32),
+                 np.asarray([m.coef for m in f], np.float32)) for f in fresh]
+
     def full_flood(self) -> list[list[Message]]:
         """Flood until quiescent (≥ diameter rounds suffice for synchronous
         injection; carried-over frontiers may need fewer)."""
         return self.rounds(self.diameter + 1)
+
+    # -- churn hooks -----------------------------------------------------------
+    def _drop_frontier(self, i: int) -> None:
+        self.states[i].frontier = []
+
+    def _anti_entropy(self, a: int, b: int, report: SyncReport) -> None:
+        """Symmetric digest exchange across one live edge: each side re-sends
+        the seed-scalar messages the other is missing.  Re-sent messages join
+        the receiver's frontier and re-flood outward (duplicates filtered by
+        S_i), so a single sync repairs the whole component."""
+        sa, sb = self.states[a], self.states[b]
+        payload = digest_bytes(len(sa.seen)) + digest_bytes(len(sb.seen))
+        moved = 0
+        for dst, dst_state, src_state in ((a, sa, sb), (b, sb, sa)):
+            missed = sorted(src_state.seen - dst_state.seen)
+            for uid in missed:
+                msg = src_state.store[uid]
+                dst_state.seen.add(uid)
+                dst_state.store[uid] = msg
+                dst_state.frontier.append(msg)
+                self._catchup[dst].append(msg)
+            moved += len(missed)
+        self.ledger.sync(payload + moved * MESSAGE_BYTES, count=moved)
+        report.syncs += 1
+        report.transferred += moved
 
     # -- introspection ---------------------------------------------------------
     def in_flight(self) -> int:
@@ -114,6 +250,204 @@ class FloodNetwork:
     def coverage(self, uid) -> int:
         """How many clients have accepted message ``uid`` (tests)."""
         return sum(uid in st.seen for st in self.states)
+
+    def seen_uids(self, i: int) -> set:
+        return set(self.states[i].seen)
+
+
+class VectorFloodNetwork(_FloodBase):
+    """Bitset engine: identical protocol, vectorized state.
+
+    Messages live in an append-only table (parallel ``seeds``/``coefs``
+    numpy arrays); each client's ``S_i`` and ``R_i`` are rows of packed
+    uint8 bit matrices.  One flood round is: per receiver, OR the frontier
+    rows of its live neighbours, then ``fresh = inbox & ~seen``;
+    ``seen |= fresh``; ``frontier = fresh``.  Ledger counts come from
+    ``np.bitwise_count`` popcounts, so byte accounting matches the
+    reference engine bit-for-bit.
+    """
+
+    _INITIAL_BITS = 512
+
+    def __init__(self, graph):
+        super().__init__(graph)
+        self._msgs: list[Message] = []
+        self._uid2idx: dict = {}
+        self._seeds = np.zeros(self._INITIAL_BITS, np.uint32)
+        self._coefs = np.zeros(self._INITIAL_BITS, np.float32)
+        nbytes = self._INITIAL_BITS // 8
+        self._seen = np.zeros((self.n, nbytes), np.uint8)
+        self._front = np.zeros((self.n, nbytes), np.uint8)
+        self._catchup: list[list[Message]] = [[] for _ in range(self.n)]
+        self._adj_version = -1
+        self._adj: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+
+    # -- message table ---------------------------------------------------------
+    def _register(self, msg: Message) -> int:
+        idx = len(self._msgs)
+        if idx >= self._seeds.shape[0]:
+            grow = self._seeds.shape[0]
+            self._seeds = np.concatenate([self._seeds, np.zeros(grow, np.uint32)])
+            self._coefs = np.concatenate([self._coefs, np.zeros(grow, np.float32)])
+            pad = np.zeros((self.n, grow // 8), np.uint8)
+            self._seen = np.concatenate([self._seen, pad], axis=1)
+            self._front = np.concatenate([self._front, pad], axis=1)
+        self._msgs.append(msg)
+        self._uid2idx[msg.uid] = idx
+        self._seeds[idx] = msg.seed
+        self._coefs[idx] = msg.coef
+        return idx
+
+    @staticmethod
+    def _set_bit(mat: np.ndarray, row: int, idx: int) -> None:
+        mat[row, idx >> 3] |= np.uint8(1 << (idx & 7))
+
+    @staticmethod
+    def _get_bit(mat: np.ndarray, row: int, idx: int) -> bool:
+        return bool(mat[row, idx >> 3] & (1 << (idx & 7)))
+
+    def _row_indices(self, bits: np.ndarray) -> np.ndarray:
+        return np.flatnonzero(
+            np.unpackbits(bits, bitorder="little")[:len(self._msgs)])
+
+    # -- protocol --------------------------------------------------------------
+    def inject(self, client: int, msg: Message) -> None:
+        if not self.topo.is_active(client):
+            raise ValueError(f"client {client} is offline")
+        if msg.uid in self._uid2idx and self._get_bit(
+                self._seen, client, self._uid2idx[msg.uid]):
+            raise ValueError(f"duplicate injection of {msg.uid}")
+        idx = self._uid2idx.get(msg.uid)
+        if idx is None:
+            idx = self._register(msg)
+        self._set_bit(self._seen, client, idx)
+        self._set_bit(self._front, client, idx)
+
+    def _flat_adjacency(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(degrees, flat neighbour ids, per-node segment starts) — the
+        reduceat layout for one vectorized OR-gather per round.  Rebuilt only
+        when the topology version changes."""
+        if self._adj_version != self.topo.version:
+            nbrs = self.neighbors
+            deg = np.array([len(ns) for ns in nbrs], np.int64)
+            src = (np.concatenate([np.asarray(ns, np.int64)
+                                   for ns in nbrs if ns])
+                   if deg.sum() else np.zeros(0, np.int64))
+            seg = np.zeros(self.n, np.int64)
+            np.cumsum(deg[:-1], out=seg[1:])
+            self._adj = (deg, src, seg)
+            self._adj_version = self.topo.version
+        return self._adj
+
+    def _round_bits(self) -> np.ndarray:
+        """One synchronous round on the bit matrices; returns fresh bits."""
+        deg, src, seg = self._flat_adjacency()
+        counts = np.bitwise_count(self._front).sum(axis=1, dtype=np.int64)
+        sent = int((counts * deg).sum())
+        if sent:
+            self.ledger.send(sent * MESSAGE_BYTES, count=sent)
+        if src.size:
+            # inbox[i] = OR of neighbours' frontiers; reduceat over the
+            # flattened neighbour rows does every segment in one C call.
+            # Zero-degree segments alias a neighbouring row — masked below.
+            inbox = np.bitwise_or.reduceat(
+                self._front[src], np.minimum(seg, src.size - 1), axis=0)
+            inbox[deg == 0] = 0
+        else:
+            inbox = np.zeros_like(self._front)
+        fresh = inbox & ~self._seen
+        self._seen |= fresh
+        self._front = fresh
+        self.ledger.rounds += 1
+        return fresh
+
+    def round(self) -> list[list[Message]]:
+        fresh = self._round_bits()
+        return self._materialize(fresh)
+
+    def _rounds_bits(self, k: int) -> np.ndarray:
+        acc = np.zeros_like(self._front)
+        for _ in range(k):
+            if not self._front.any():
+                break  # quiescent
+            acc |= self._round_bits()
+        return acc
+
+    def rounds(self, k: int) -> list[list[Message]]:
+        return self._materialize(self._rounds_bits(k))
+
+    def rounds_arrays(self, k: int) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Fast path: per-client (seeds, coefs) arrays of the messages newly
+        accepted over k rounds — no Message objects on the hot loop."""
+        acc = self._rounds_bits(k)
+        out = []
+        for i in range(self.n):
+            idx = self._row_indices(acc[i])
+            out.append((self._seeds[idx], self._coefs[idx]))
+        return out
+
+    def full_flood(self) -> list[list[Message]]:
+        return self.rounds(self.diameter + 1)
+
+    def _materialize(self, bits: np.ndarray) -> list[list[Message]]:
+        out: list[list[Message]] = []
+        for i in range(self.n):
+            if bits[i].any():
+                out.append([self._msgs[j] for j in self._row_indices(bits[i])])
+            else:
+                out.append([])
+        return out
+
+    # -- churn hooks -----------------------------------------------------------
+    def _drop_frontier(self, i: int) -> None:
+        self._front[i] = 0
+
+    def _anti_entropy(self, a: int, b: int, report: SyncReport) -> None:
+        seen_a = int(np.bitwise_count(self._seen[a]).sum())
+        seen_b = int(np.bitwise_count(self._seen[b]).sum())
+        payload = digest_bytes(seen_a) + digest_bytes(seen_b)
+        moved = 0
+        for dst, src in ((a, b), (b, a)):
+            missed = self._seen[src] & ~self._seen[dst]
+            m = int(np.bitwise_count(missed).sum())
+            if m:
+                self._seen[dst] |= missed
+                self._front[dst] |= missed
+                self._catchup[dst].extend(
+                    self._msgs[j] for j in self._row_indices(missed))
+            moved += m
+        self.ledger.sync(payload + moved * MESSAGE_BYTES, count=moved)
+        report.syncs += 1
+        report.transferred += moved
+
+    # -- introspection ---------------------------------------------------------
+    def in_flight(self) -> int:
+        return int(np.bitwise_count(self._front).sum())
+
+    def coverage(self, uid) -> int:
+        idx = self._uid2idx.get(uid)
+        if idx is None:
+            return 0
+        return sum(self._get_bit(self._seen, i, idx) for i in range(self.n))
+
+    def seen_uids(self, i: int) -> set:
+        return {self._msgs[j].uid for j in self._row_indices(self._seen[i])}
+
+
+FLOOD_BACKENDS = {"python": FloodNetwork, "numpy": VectorFloodNetwork}
+
+
+def make_network(graph, backend: str = "python"):
+    """Factory over the two engines; ``backend="auto"`` picks the bitset
+    engine once the network is big enough for the vectorization to pay."""
+    if backend == "auto":
+        n = (graph.n if isinstance(graph, DynamicTopology)
+             else graph.number_of_nodes())
+        backend = "numpy" if n >= AUTO_VECTOR_MIN_CLIENTS else "python"
+    if backend not in FLOOD_BACKENDS:
+        raise KeyError(f"unknown flood backend '{backend}' "
+                       f"(have {sorted(FLOOD_BACKENDS)} or 'auto')")
+    return FLOOD_BACKENDS[backend](graph)
 
 
 def staleness_bound(diameter: int, k: int) -> int:

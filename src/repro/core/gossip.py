@@ -87,18 +87,28 @@ def choco_init(stacked_params: Any) -> ChocoState:
 
 
 def choco_round(params: Any, state: ChocoState, W: np.ndarray,
-                density: float, consensus_lr: float = 1.0):
+                density: float, consensus_lr: float = 1.0,
+                active: np.ndarray | None = None):
     """One ChocoSGD communication round.
 
     q_i = C(x_i − x̂_i)            (compress the innovation)
     x̂_i ← x̂_i + q_i               (all clients update all surrogates)
     x_i ← x_i + γ Σ_j w_ij (x̂_j − x̂_i)
 
+    ``active`` (churn): offline clients transmit no innovation, so their
+    surrogate copies stay frozen network-wide; ``W``'s identity rows keep
+    their parameters untouched.
+
     Returns (new_params, new_state, bits_payload_density) — the runner charges
     topk payload bytes for q.
     """
     q = jax.tree.map(lambda x, xh: topk_compress(x - xh, density),
                      params, state.x_hat)
+    if active is not None:
+        mask = jnp.asarray(active)
+        q = jax.tree.map(
+            lambda l: jnp.where(mask.reshape((-1,) + (1,) * (l.ndim - 1)),
+                                l, jnp.zeros_like(l)), q)
     x_hat = jax.tree.map(jnp.add, state.x_hat, q)
 
     Wj = jnp.asarray(W, jnp.float32)

@@ -17,6 +17,17 @@ COEF_BYTES = 2      # fp16 scalar
 HEADER_BYTES = 2    # dedup id / framing
 MESSAGE_BYTES = SEED_BYTES + COEF_BYTES + HEADER_BYTES
 
+# Anti-entropy (DESIGN.md §6): a rejoining client and its sync partner
+# exchange compact seen-set digests (1 byte of truncated uid hash per entry
+# plus a fixed frame) before re-sending only the set difference.
+DIGEST_HEADER_BYTES = 8
+DIGEST_BYTES_PER_MSG = 1
+
+
+def digest_bytes(n_seen: int) -> int:
+    """Wire size of one seen-set digest covering ``n_seen`` message uids."""
+    return DIGEST_HEADER_BYTES + n_seen * DIGEST_BYTES_PER_MSG
+
 
 @dataclasses.dataclass(frozen=True)
 class Message:
@@ -46,10 +57,19 @@ class CommLedger:
     n_edges: int = 1
     n_messages: int = 0
     rounds: int = 0
+    sync_bytes: int = 0       # anti-entropy digests + re-sent messages
+    n_syncs: int = 0          # pairwise digest exchanges
 
     def send(self, nbytes: int, count: int = 1) -> None:
         self.total_bytes += nbytes
         self.n_messages += count
+
+    def sync(self, nbytes: int, count: int = 0) -> None:
+        """Charge one anti-entropy exchange (counts toward total_bytes)."""
+        self.total_bytes += nbytes
+        self.sync_bytes += nbytes
+        self.n_messages += count
+        self.n_syncs += 1
 
     @property
     def per_edge(self) -> float:

@@ -15,6 +15,14 @@ Every method keeps *per-client* parameters stacked on a leading client axis
 (SeedFlood clients provably coincide after full flooding — a test asserts
 this rather than assuming it) and reports Global Model Performance of the
 averaged model, the paper's GMP metric.
+
+Beyond the paper, runs can be subjected to **churn** (DESIGN.md §6): a
+``ChurnSchedule``/``ChurnConfig`` scripts node departures, rejoins, link
+failures, and transient partitions.  Offline clients freeze (no local
+steps, no communication); SeedFlood recovers rejoining clients via the
+flood layer's anti-entropy catch-up, while gossip baselines only pull
+them back through slow averaging — the contrast the churn experiments
+(``examples/churn_recovery.py``) measure.
 """
 from __future__ import annotations
 
@@ -26,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig, Group, uniform_dense
+from repro.configs.base import ArchConfig, ChurnConfig, Group, uniform_dense
 from repro.core import flood, gossip, messages, seeds as seedlib, subcge, zo
 from repro.core.messages import Message, MESSAGE_BYTES
 from repro.core.subcge import SubCGEConfig
@@ -36,6 +44,7 @@ from repro.models import params as plib
 from repro.models import transformer as tf
 from repro.models.perturb import Pert, nest_subspace, sample_pert
 from repro.topology import graphs
+from repro.topology.dynamic import ChurnSchedule, DynamicTopology
 
 
 def sim_arch(vocab: int = 256, d_model: int = 64, n_layers: int = 2,
@@ -68,6 +77,12 @@ class DTrainConfig:
     partition: str = "uniform"
     arch: ArchConfig | None = None
     task: synthetic.TaskConfig | None = None
+    # churn (DESIGN.md §6): a ChurnSchedule or declarative ChurnConfig; None
+    # reproduces the paper's static-topology setting exactly.
+    churn: Any = None
+    # flood engine: "python" (per-message reference), "numpy" (bitset fast
+    # path), or "auto" (numpy once n_clients is large enough to pay off).
+    flood_backend: str = "auto"
 
 
 @dataclasses.dataclass
@@ -128,6 +143,43 @@ def _pad_pow2(k: int, minimum: int = 4) -> int:
     return n
 
 
+def _churn_schedule(cfg: DTrainConfig) -> ChurnSchedule | None:
+    if cfg.churn is None:
+        return None
+    if isinstance(cfg.churn, ChurnSchedule):
+        return cfg.churn
+    if isinstance(cfg.churn, ChurnConfig):
+        return ChurnSchedule.from_config(cfg.churn)
+    raise TypeError(f"churn must be a ChurnSchedule or ChurnConfig, "
+                    f"got {type(cfg.churn).__name__}")
+
+
+def _require_static(cfg: DTrainConfig, method: str) -> None:
+    if cfg.churn is not None:
+        raise ValueError(f"method '{method}' does not support churn")
+
+
+def _active_consensus(stacked, active: np.ndarray) -> float:
+    """Consensus error over online clients only (offline params are frozen
+    snapshots — counting them would conflate churn with divergence)."""
+    idx = np.flatnonzero(active)
+    if idx.size <= 1:
+        return 0.0
+    sub = jax.tree.map(lambda l: l[idx], stacked)
+    return float(gossip.consensus_error(sub))
+
+
+def _freeze_offline(new, old, active: np.ndarray):
+    """Keep offline clients' leaves at their pre-step values."""
+    mask = jnp.asarray(active)
+
+    def f(a, b):
+        m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(f, new, old)
+
+
 # ---------------------------------------------------------------------------
 # SeedFlood (Algorithm 1)
 # ---------------------------------------------------------------------------
@@ -135,8 +187,8 @@ def _pad_pow2(k: int, minimum: int = 4) -> int:
 def run_seedflood(cfg: DTrainConfig) -> RunResult:
     s = _Setup(cfg)
     n = cfg.n_clients
-    net = flood.FloodNetwork(s.graph)
-    k_hops = cfg.flood_k if cfg.flood_k is not None else net.diameter
+    churn = _churn_schedule(cfg)
+    net = flood.make_network(s.graph, backend=cfg.flood_backend)
     meta, scfg, arch = s.meta, s.scfg, s.arch
 
     # ---- jitted pieces ----------------------------------------------------
@@ -174,55 +226,78 @@ def run_seedflood(cfg: DTrainConfig) -> RunResult:
 
     # ---- training loop ------------------------------------------------------
     stacked = s.stacked
-    loss_curve, acc_curve = [], []
+    active = net.active_mask()
+    loss_curve, acc_curve, consensus_curve = [], [], []
     t0 = time.time()
     for t in range(cfg.steps):
+        # churn events land at the start of the step; rejoined clients carry
+        # their anti-entropy catch-up messages into this step's apply phase
+        pending: list[list[Message]] = [[] for _ in range(n)]
+        if churn is not None and churn.events_at(t):
+            net.apply_churn(churn.events_at(t))
+            active = net.active_mask()
+            pending = net.drain_catchup()
+        # full flooding tracks the *effective* diameter, which churn moves
+        k_hops = cfg.flood_k if cfg.flood_k is not None else net.diameter
+
         batch = s.batches(t)
         seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
         alphas, losses = estimate_all(stacked, batch, seeds_t, t)
         alphas = np.asarray(alphas)
-        loss_curve.append(float(np.mean(np.asarray(losses))))
+        loss_curve.append(float(np.mean(np.asarray(losses)[active])))
 
-        coefs = -cfg.lr * alphas / n
-        # (B) local update: client applies its own message immediately
+        n_eff = max(int(active.sum()), 1)   # == n on a static topology
+        coefs = -cfg.lr * alphas / n_eff
+        # (B) local update: each online client applies its own message
+        # immediately; offline clients freeze (no step, no message)
         seeds_np = np.asarray(seeds_t)
         new_stacked = []
         for i in range(n):
             p_i = jax.tree.map(lambda l: l[i], stacked)
-            p_i = apply_msgs(p_i, t, seeds_np[i:i + 1], coefs[i:i + 1])
+            if active[i]:
+                p_i = apply_msgs(p_i, t, seeds_np[i:i + 1], coefs[i:i + 1])
+                # (C) inject into the flood network
+                net.inject(i, Message(seed=int(seeds_np[i]),
+                                      coef=float(coefs[i]), origin=i, step=t))
             new_stacked.append(p_i)
-            # (C) inject into the flood network
-            net.inject(i, Message(seed=int(seeds_np[i]), coef=float(coefs[i]),
-                                  origin=i, step=t))
         stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
 
         # flooding: k hops per local iteration (frontiers persist — delayed
         # flooding semantics when k < diameter)
-        fresh = net.rounds(k_hops)
+        payloads = net.rounds_arrays(k_hops)
         new_stacked = []
         for i in range(n):
+            sds, cfs = payloads[i]
+            if pending[i]:   # anti-entropy catch-up applies like fresh floods
+                sds = np.concatenate([np.asarray([m.seed for m in pending[i]],
+                                                 np.uint32), sds])
+                cfs = np.concatenate([np.asarray([m.coef for m in pending[i]],
+                                                 np.float32), cfs])
             p_i = jax.tree.map(lambda l: l[i], stacked)
-            if fresh[i]:
-                sds = np.asarray([m.seed for m in fresh[i]], np.uint32)
-                cfs = np.asarray([m.coef for m in fresh[i]], np.float32)
+            if len(sds):
                 # NOTE: messages are applied under the sender's-step subspace;
-                # with τ ≥ staleness this matches the sender exactly.
+                # with τ ≥ staleness (incl. outage length) this matches the
+                # sender exactly.
                 p_i = apply_msgs(p_i, t, sds, cfs)
             new_stacked.append(p_i)
         stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
 
         if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
             acc_curve.append((t + 1, s.gmp(stacked)))
+            consensus_curve.append((t + 1, _active_consensus(stacked, active)))
 
     gmp = s.gmp(stacked)
+    k_label = cfg.flood_k if cfg.flood_k is not None else net.diameter
     return RunResult(
-        method=f"seedflood(k={k_hops})", gmp=gmp, loss_curve=loss_curve,
+        method=f"seedflood(k={k_label})", gmp=gmp, loss_curve=loss_curve,
         acc_curve=acc_curve, bytes_per_edge=net.ledger.per_edge,
         total_bytes=net.ledger.total_bytes,
-        consensus_error=float(gossip.consensus_error(stacked)),
+        consensus_error=_active_consensus(stacked, active),
         wall_s=time.time() - t0,
         extra={"n_messages": net.ledger.n_messages, "diameter": net.diameter,
-               "n_params": s.n_params})
+               "n_params": s.n_params, "consensus_curve": consensus_curve,
+               "sync_bytes": net.ledger.sync_bytes,
+               "n_syncs": net.ledger.n_syncs})
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +311,14 @@ def _gossip_common(cfg: DTrainConfig, *, zeroth_order: bool, use_lora: bool,
     arch, meta = s.arch, s.meta
     ledger = messages.CommLedger(n_edges=s.graph.number_of_edges())
     n_edges = s.graph.number_of_edges()
+
+    # churn: gossip has no anti-entropy — offline clients freeze and the
+    # mixing matrix shrinks to the live subgraph (frozen rows become e_i)
+    churn = _churn_schedule(cfg)
+    topo = DynamicTopology(s.graph) if churn is not None else None
+    active = np.ones(n, dtype=bool)
+    W = s.W
+    live_edges = n_edges
 
     lspec = None
     lora_stacked = None
@@ -288,29 +371,39 @@ def _gossip_common(cfg: DTrainConfig, *, zeroth_order: bool, use_lora: bool,
     base = s.stacked
     choco_state = gossip.choco_init(trainable) if choco else None
 
-    loss_curve, acc_curve = [], []
+    loss_curve, acc_curve, consensus_curve = [], [], []
     t0 = time.time()
     for t in range(cfg.steps):
+        if topo is not None and churn.events_at(t):
+            topo.apply_events(churn.events_at(t))
+            active = topo.active_mask()
+            W = graphs.metropolis_weights(topo.current_graph())
+            live_edges = topo.live_edge_count()
+
         batch = s.batches(t)
         if zeroth_order:
             seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
-            trainable, stat = local_steps(base, trainable, batch, seeds_t)
+            new_trainable, stat = local_steps(base, trainable, batch, seeds_t)
         else:
-            trainable, stat = local_steps(base, trainable, batch)
-        loss_curve.append(float(np.mean(np.asarray(stat))))
+            new_trainable, stat = local_steps(base, trainable, batch)
+        trainable = (_freeze_offline(new_trainable, trainable, active)
+                     if topo is not None else new_trainable)
+        loss_curve.append(float(np.mean(np.asarray(stat)[active])))
 
         if (t + 1) % cfg.local_iters == 0:
             if choco:
                 trainable, choco_state = gossip.choco_round(
-                    trainable, choco_state, s.W, cfg.choco_density)
-                ledger.send(2 * n_edges * messages.topk_payload_bytes(
+                    trainable, choco_state, W, cfg.choco_density,
+                    active=active if topo is not None else None)
+                ledger.send(2 * live_edges * messages.topk_payload_bytes(
                     payload // 4, cfg.choco_density))
             else:
-                trainable = gossip.mix(trainable, s.W)
-                ledger.send(2 * n_edges * payload)
+                trainable = gossip.mix(trainable, W)
+                ledger.send(2 * live_edges * payload)
         if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
             merged = jax.vmap(full_params)(base, trainable) if use_lora else trainable
             acc_curve.append((t + 1, s.gmp(merged)))
+            consensus_curve.append((t + 1, _active_consensus(merged, active)))
 
     merged = jax.vmap(full_params)(base, trainable) if use_lora else trainable
     name = ("choco" if choco else ("dzsgd" if zeroth_order else "dsgd"))
@@ -320,8 +413,9 @@ def _gossip_common(cfg: DTrainConfig, *, zeroth_order: bool, use_lora: bool,
         method=name, gmp=s.gmp(merged), loss_curve=loss_curve,
         acc_curve=acc_curve, bytes_per_edge=ledger.per_edge,
         total_bytes=ledger.total_bytes,
-        consensus_error=float(gossip.consensus_error(merged)),
-        wall_s=time.time() - t0, extra={"n_params": s.n_params})
+        consensus_error=_active_consensus(merged, active),
+        wall_s=time.time() - t0,
+        extra={"n_params": s.n_params, "consensus_curve": consensus_curve})
 
 
 def run_dsgd(cfg):   return _gossip_common(cfg, zeroth_order=False, use_lora=False, choco=False)
@@ -337,6 +431,7 @@ def run_choco_lora(cfg): return _gossip_common(cfg, zeroth_order=False, use_lora
 # ---------------------------------------------------------------------------
 
 def run_gossip_sr(cfg: DTrainConfig) -> RunResult:
+    _require_static(cfg, "gossip_sr")
     s = _Setup(cfg)
     n = cfg.n_clients
     arch, meta, scfg = s.arch, s.meta, s.scfg
@@ -442,6 +537,7 @@ def run_central_zo(cfg: DTrainConfig) -> RunResult:
     """Centralized SubCGE-ZO with n perturbations per step, averaging the n
     two-point estimates — mathematically identical to SeedFlood under full
     flooding (same seeds, same batches)."""
+    _require_static(cfg, "central_zo")
     s = _Setup(cfg)
     n = cfg.n_clients
     arch, meta, scfg = s.arch, s.meta, s.scfg

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships this as TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, h_ref, *, bt, nt):
     @pl.when(pl.program_id(2) == 0)
@@ -81,7 +85,7 @@ def selective_scan(a: jax.Array, bx: jax.Array, c: jax.Array, h0: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((B, T, D), jnp.float32),
                    jax.ShapeDtypeStruct((B, D, N), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(am, bx, c.reshape(B, T, 1, N), h0)

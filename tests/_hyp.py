@@ -1,0 +1,29 @@
+"""Optional-hypothesis shim for the tier-1 environment.
+
+The container running the tier-1 suite does not ship ``hypothesis``.
+Property-test modules import ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` directly: when hypothesis is installed (CI, dev
+boxes) they are the real thing; when it is missing, ``given`` marks the
+test skipped and the strategy namespace returns inert placeholders so
+module-level decorator expressions still evaluate.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 container
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")

@@ -1,0 +1,299 @@
+"""Churn-tolerant flooding (DESIGN.md §6): dynamic topology mutations,
+anti-entropy recovery, bitset-engine equivalence with the per-message
+reference, staleness bounds under failures, and runner-level
+rejoin-then-converge (SeedFlood recovers; gossip degrades)."""
+import numpy as np
+import pytest
+
+from repro.core import flood
+from repro.core.messages import Message, MESSAGE_BYTES
+from repro.topology import graphs
+from repro.topology.dynamic import (ChurnEvent, ChurnSchedule,
+                                    DynamicTopology)
+
+ENGINES = [flood.FloodNetwork, flood.VectorFloodNetwork]
+
+
+def _inject_all(net, step=0):
+    for i in range(net.n):
+        if net.active_mask()[i]:
+            net.inject(i, Message(seed=1000 + i + 10_000 * step, coef=0.5,
+                                  origin=i, step=step))
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        ChurnEvent(0, "explode")
+    with pytest.raises(ValueError):
+        ChurnEvent(-1, "leave", nodes=(0,))
+    with pytest.raises(ValueError):
+        ChurnEvent(0, "leave")                  # no nodes
+    with pytest.raises(ValueError):
+        ChurnEvent(0, "partition", groups=((0, 1),))  # one group
+
+
+def test_leave_rejoin_schedule():
+    s = ChurnSchedule.leave_rejoin([2, 5], leave_at=3, rejoin_at=7)
+    assert [e.kind for e in s.events] == ["leave", "join"]
+    assert s.events_at(3)[0].nodes == (2, 5)
+    assert s.events_at(4) == []
+    assert s.horizon == 7
+    with pytest.raises(ValueError):
+        ChurnSchedule.leave_rejoin([0], 5, 5)
+
+
+def test_random_churn_deterministic_and_consistent():
+    a = ChurnSchedule.random_churn(16, 60, rate=0.08, seed=3,
+                                   max_concurrent=3)
+    b = ChurnSchedule.random_churn(16, 60, rate=0.08, seed=3,
+                                   max_concurrent=3)
+    assert a.events == b.events
+    assert len(a) > 0
+    # replay: every leave is eventually matched by a join, never more than
+    # max_concurrent offline, and everyone is back online at the horizon
+    offline = set()
+    for ev in a.events:
+        if ev.kind == "leave":
+            assert ev.nodes[0] not in offline
+            offline.add(ev.nodes[0])
+        else:
+            assert ev.kind == "join" and ev.nodes[0] in offline
+            offline.discard(ev.nodes[0])
+        assert len(offline) <= 3
+    assert not offline
+
+
+def test_dynamic_topology_mutations():
+    topo = DynamicTopology(graphs.ring(8))
+    assert topo.effective_diameter() == 4
+    topo.fail_link(0, 1)                    # ring -> path: diameter doubles
+    assert topo.effective_diameter() == 7
+    assert 1 not in topo.neighbors()[0]
+    topo.restore_link(0, 1)
+    assert topo.effective_diameter() == 4
+
+    topo.leave(3)
+    assert not topo.is_active(3)
+    assert topo.neighbors()[3] == []
+    assert 3 not in topo.neighbors()[2]
+    with pytest.raises(ValueError):
+        topo.leave(3)                       # double leave
+    assert topo.join(3) == 2                # lowest-id live neighbour
+    with pytest.raises(ValueError):
+        topo.join(3)                        # double join
+
+
+def test_partition_and_heal_cut_exactly_the_cross_edges():
+    topo = DynamicTopology(graphs.meshgrid(16))   # 4x4 grid
+    left = [i for i in range(16) if i % 4 < 2]
+    right = [i for i in range(16) if i % 4 >= 2]
+    cut = topo.partition([left, right])
+    assert len(cut) == 4                    # one column boundary, 4 rows
+    assert not topo.is_connected()
+    assert sorted(topo.heal()) == sorted(cut)
+    assert topo.is_connected()
+
+
+# ---------------------------------------------------------------------------
+# flood under churn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_dropout_drops_frontier_and_rejoin_recovers(engine):
+    net = engine(graphs.meshgrid(16))
+    _inject_all(net)
+    # node 5 departs before any flooding: its own fresh message rides only in
+    # its frontier, which the departure drops — the message is lost for now
+    net.apply_churn([ChurnEvent(0, "leave", nodes=(5,))])
+    net.full_flood()
+    assert net.coverage((5, 0)) == 1
+    for i in range(16):
+        if i != 5:
+            assert net.coverage((i, 0)) == 15   # everyone online got them
+    # rejoin: anti-entropy runs across each of node 5's four revived edges,
+    # pulling the 15 missed messages in and pushing its lost message out
+    report = net.apply_churn([ChurnEvent(1, "join", nodes=(5,))])
+    assert report.syncs == 4                # deg(5) on the 4x4 grid
+    assert report.transferred == 16 + 3     # 15 in + (5,0) out to each nbr
+    catch = net.drain_catchup()
+    assert len(catch[5]) == 15
+    net.full_flood()
+    for i in range(16):
+        assert net.coverage((i, 0)) == 16
+    assert net.ledger.n_syncs == 4
+    assert net.ledger.sync_bytes > 16 * MESSAGE_BYTES
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_partition_heal_refloods_missed_messages(engine):
+    net = engine(graphs.meshgrid(16))
+    groups = [list(range(8)), list(range(8, 16))]
+    net.apply_churn([ChurnEvent(0, "partition", groups=[tuple(g) for g in groups])])
+    _inject_all(net)
+    net.full_flood()
+    assert net.coverage((0, 0)) == 8        # flood stays within the island
+    assert net.coverage((12, 0)) == 8
+    net.apply_churn([ChurnEvent(1, "heal")])
+    net.full_flood()
+    for i in range(16):
+        assert net.coverage((i, 0)) == 16
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_rejoin_bridges_disconnected_survivor_components(engine):
+    """A vertex cut leaves {1,2,3} and {5,6,7} flooding independently; the
+    rejoining bridge nodes must anti-entropy across *every* revived edge,
+    otherwise one component's messages are silently lost forever."""
+    net = engine(graphs.ring(8))
+    net.apply_churn([ChurnEvent(0, "leave", nodes=(0, 4))])
+    _inject_all(net, step=1)                # both islands flood their own
+    net.full_flood()
+    assert net.coverage((1, 1)) == 3 and net.coverage((5, 1)) == 3
+    net.apply_churn([ChurnEvent(1, "join", nodes=(0, 4))])
+    net.full_flood()
+    for origin in (1, 2, 3, 5, 6, 7):       # every survivor message is
+        assert net.coverage((origin, 1)) == 8   # everywhere, bridges included
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_offline_client_rejects_inject(engine):
+    net = engine(graphs.ring(6))
+    net.apply_churn([ChurnEvent(0, "leave", nodes=(2,))])
+    with pytest.raises(ValueError):
+        net.inject(2, Message(seed=7, coef=1.0, origin=2, step=0))
+
+
+def test_staleness_bound_holds_under_link_failure():
+    """Delayed flooding with k hops/iteration still covers within
+    ⌈D_eff/k⌉ iterations of the *current* (degraded) topology."""
+    n, k = 12, 2
+    net = flood.FloodNetwork(graphs.ring(n))
+    net.apply_churn([ChurnEvent(0, "link_down", edges=((0, n - 1),))])
+    D_eff = net.diameter
+    assert D_eff == n - 1                   # ring minus an edge is a path
+    bound = flood.staleness_bound(D_eff, k)
+    net.inject(0, Message(seed=9, coef=1.0, origin=0, step=0))
+    iters = 0
+    while net.coverage((0, 0)) < n:
+        net.rounds(k)
+        iters += 1
+        assert iters <= bound
+    assert iters <= bound
+
+
+# ---------------------------------------------------------------------------
+# bitset engine == reference engine, churn included
+# ---------------------------------------------------------------------------
+
+def _uid_sets(fresh):
+    return [{m.uid for m in f} for f in fresh]
+
+
+@pytest.mark.parametrize("topo,n", [("ring", 8), ("meshgrid", 16),
+                                    ("torus", 16), ("star", 9)])
+def test_vector_engine_matches_reference_static(topo, n):
+    a = flood.FloodNetwork(graphs.make(topo, n))
+    b = flood.VectorFloodNetwork(graphs.make(topo, n))
+    _inject_all(a)
+    _inject_all(b)
+    assert _uid_sets(a.full_flood()) == _uid_sets(b.full_flood())
+    la, lb = a.ledger, b.ledger
+    assert (la.total_bytes, la.n_messages, la.rounds) == \
+           (lb.total_bytes, lb.n_messages, lb.rounds)
+
+
+def test_vector_engine_matches_reference_under_churn_script():
+    """Same scripted run — injections, partial floods, leaves, link
+    failures, rejoins — produces identical seen-sets, coverage, catch-up
+    payloads, and byte ledgers on both engines."""
+    script = [
+        ("inject", 0), ("rounds", 2),
+        ("churn", ChurnEvent(0, "leave", nodes=(5,))),
+        ("inject", 1), ("rounds", 2),
+        ("churn", ChurnEvent(0, "link_down", edges=((0, 1),))),
+        ("inject", 2), ("rounds", 1),
+        ("churn", ChurnEvent(0, "join", nodes=(5,))),
+        ("churn", ChurnEvent(0, "link_up", edges=((0, 1),))),
+        ("rounds", 4),
+    ]
+    nets = [flood.FloodNetwork(graphs.meshgrid(16)),
+            flood.VectorFloodNetwork(graphs.meshgrid(16))]
+    for op, arg in script:
+        results = []
+        for net in nets:
+            if op == "inject":
+                _inject_all(net, step=arg)
+                results.append(None)
+            elif op == "rounds":
+                results.append(_uid_sets(net.rounds(arg)))
+            else:
+                net.apply_churn([arg])
+                results.append(_uid_sets(net.drain_catchup()))
+        assert results[0] == results[1]
+    a, b = nets
+    for i in range(16):
+        assert a.seen_uids(i) == b.seen_uids(i)
+    assert (a.ledger.total_bytes, a.ledger.n_messages, a.ledger.rounds,
+            a.ledger.sync_bytes, a.ledger.n_syncs) == \
+           (b.ledger.total_bytes, b.ledger.n_messages, b.ledger.rounds,
+            b.ledger.sync_bytes, b.ledger.n_syncs)
+
+
+def test_rounds_arrays_matches_messages():
+    net = flood.VectorFloodNetwork(graphs.ring(8))
+    ref = flood.FloodNetwork(graphs.ring(8))
+    _inject_all(net)
+    _inject_all(ref)
+    arr = net.rounds_arrays(10)
+    msgs = ref.rounds(10)
+    for i in range(8):
+        assert sorted(arr[i][0].tolist()) == sorted(m.seed for m in msgs[i])
+        np.testing.assert_allclose(sorted(arr[i][1].tolist()),
+                                   sorted(m.coef for m in msgs[i]))
+
+
+# ---------------------------------------------------------------------------
+# runner-level: rejoin-then-converge
+# ---------------------------------------------------------------------------
+
+def _run_cfg(**kw):
+    from repro.dtrain.runner import DTrainConfig, sim_arch
+    base = dict(n_clients=4, topology="ring", steps=6, lr=1e-2, batch_size=4,
+                subcge_rank=8, local_iters=2,
+                arch=sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64))
+    base.update(kw)
+    return DTrainConfig(**base)
+
+
+def test_seedflood_rejoin_reconverges_and_gossip_degrades():
+    from repro.dtrain.runner import run
+    churn = ChurnSchedule.leave_rejoin([2], leave_at=2, rejoin_at=4)
+    sf = run(_run_cfg(method="seedflood", churn=churn))
+    # after anti-entropy catch-up, every client's params coincide again
+    assert sf.consensus_error < 1e-9
+    assert sf.extra["n_syncs"] >= 1
+    dz = run(_run_cfg(method="dzsgd", churn=churn))
+    assert dz.consensus_error > max(sf.consensus_error * 100, 1e-8)
+
+
+def test_seedflood_backends_agree_under_churn():
+    from repro.dtrain.runner import run
+    churn = ChurnSchedule.leave_rejoin([2], leave_at=2, rejoin_at=4)
+    py = run(_run_cfg(method="seedflood", churn=churn, flood_backend="python"))
+    vec = run(_run_cfg(method="seedflood", churn=churn, flood_backend="numpy"))
+    np.testing.assert_allclose(py.loss_curve, vec.loss_curve,
+                               rtol=1e-4, atol=1e-6)
+    assert py.total_bytes == vec.total_bytes
+    assert vec.consensus_error < 1e-9
+
+
+def test_churn_rejected_by_static_only_methods():
+    from repro.dtrain.runner import run
+    churn = ChurnSchedule.leave_rejoin([1], 1, 2)
+    for method in ("gossip_sr", "central_zo"):
+        with pytest.raises(ValueError):
+            run(_run_cfg(method=method, churn=churn))

@@ -4,7 +4,7 @@ staleness bounds, byte accounting."""
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import flood
 from repro.core.messages import Message, MESSAGE_BYTES

@@ -27,7 +27,9 @@ def _cfg(**kw):
 
 @pytest.fixture(scope="module")
 def seedflood_run():
-    return run(_cfg(method="seedflood"))
+    # n=8: the ZO step averages 8 two-point estimates, which this CPU/jax
+    # build needs to clear chance within 120 steps (n=4 stalls at ~0.23)
+    return run(_cfg(method="seedflood", n_clients=8))
 
 
 def test_training_improves_over_zero_shot(seedflood_run):
