@@ -1,0 +1,80 @@
+"""Per-step wall-time microbench for the SeedFlood simulator (ISSUE 2).
+
+Times one training step of ``run_seedflood`` on a ring across the grid
+
+    n ∈ {8, 64}  ×  flood backend ∈ {python, numpy}  ×
+    step path ∈ {per_client, batched}
+
+and emits ``BENCH_step.json`` so CI tracks the perf trajectory.  The
+``batched`` path is the jit-resident pipeline (one fused estimate+update
+dispatch and one padded-matrix replay dispatch per step); ``per_client`` is
+the reference loop (2n tree-unstack/dispatch/restack cycles per step) it
+replaced.  The runner records per-step wall times
+(``extra["step_wall_s"]``); we report the median over the post-compile
+steps, which is immune to jit-compilation jitter.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_step.py [--ns 8,64] [--out BENCH_step.json]
+"""
+import argparse
+import json
+import statistics
+import time
+
+from repro.dtrain.runner import DTrainConfig, run, sim_arch
+
+
+def _cfg(n: int, backend: str, batched: bool, steps: int) -> DTrainConfig:
+    return DTrainConfig(
+        method="seedflood", n_clients=n, topology="ring", steps=steps,
+        lr=1e-2, batch_size=4, subcge_rank=8, flood_backend=backend,
+        batched_step=batched,
+        arch=sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64))
+
+
+def time_per_step(n: int, backend: str, batched: bool, steps: int) -> float:
+    r = run(_cfg(n, backend, batched, steps))
+    # step 0 (and, on the per-client path, any step introducing a new padded
+    # K) pays compilation; the median over the remaining steps is steady-state
+    return statistics.median(r.extra["step_wall_s"][1:])
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--ns", default="8,64")
+    p.add_argument("--steps", type=int, default=6)
+    p.add_argument("--out", default="BENCH_step.json")
+    args = p.parse_args()
+    ns = [int(x) for x in args.ns.split(",")]
+
+    rows = []
+    t0 = time.time()
+    for n in ns:
+        for backend in ("python", "numpy"):
+            for path in ("per_client", "batched"):
+                sec = time_per_step(n, backend, path == "batched", args.steps)
+                rows.append({"n": n, "topology": "ring", "backend": backend,
+                             "path": path, "ms_per_step": round(sec * 1e3, 3)})
+                print(f"n={n:>3} backend={backend:>6} path={path:>10}: "
+                      f"{sec * 1e3:8.1f} ms/step", flush=True)
+
+    def _ms(n, backend, path):
+        return next(r["ms_per_step"] for r in rows
+                    if r["n"] == n and r["backend"] == backend
+                    and r["path"] == path)
+
+    speedups = {f"n={n}/{backend}":
+                round(_ms(n, backend, "per_client")
+                      / max(_ms(n, backend, "batched"), 1e-9), 2)
+                for n in ns for backend in ("python", "numpy")}
+    out = {"bench": "seedflood_step", "steps": args.steps,
+           "rows": rows, "batched_speedup": speedups,
+           "bench_wall_s": round(time.time() - t0, 1)}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nbatched speedups: {speedups}")
+    print(f"wrote {args.out} ({out['bench_wall_s']}s total)")
+
+
+if __name__ == "__main__":
+    main()

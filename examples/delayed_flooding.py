@@ -1,7 +1,13 @@
 """Delayed flooding (paper §4.5): sweep the flooding-steps hyperparameter k
 on a ring of 16 clients and watch GMP/consensus vs staleness bound ⌈D/k⌉.
 
-    PYTHONPATH=src python examples/delayed_flooding.py [--steps 60]
+With ``--tau`` below the staleness bound, messages are replayed in a later
+subspace epoch than they were sent — the regime where the epoch-correct
+replay (DESIGN.md §2) is load-bearing.  ``--drain`` flushes in-flight
+messages after the last step so the consensus column reflects delivery of
+every message rather than the final ⌈D/k⌉ steps' in-flight gap.
+
+    PYTHONPATH=src python examples/delayed_flooding.py [--steps 60] [--tau 2 --drain]
 """
 import argparse
 
@@ -14,17 +20,22 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument("--steps", type=int, default=60)
     p.add_argument("--clients", type=int, default=16)
+    p.add_argument("--tau", type=int, default=1000,
+                   help="SubCGE refresh period; < staleness bound exercises "
+                        "cross-epoch replay")
+    p.add_argument("--drain", action="store_true",
+                   help="flood to quiescence after the last step")
     args = p.parse_args()
 
     diam = graphs.diameter(graphs.ring(args.clients))
-    print(f"ring of {args.clients}: diameter D = {diam}\n"
+    print(f"ring of {args.clients}: diameter D = {diam}, tau = {args.tau}\n"
           f"{'k':>6} {'staleness≤':>10} {'GMP':>7} {'consensus':>10} {'bytes/edge':>11}")
     for k in [None, diam, 4, 2, 1]:
         r = run(DTrainConfig(
             method="seedflood", n_clients=args.clients, topology="ring",
             steps=args.steps, lr=3e-3, batch_size=16, subcge_rank=32,
-            flood_k=k, arch=sim_arch(d_model=48, n_layers=2, n_heads=4,
-                                     d_ff=96)))
+            subcge_tau=args.tau, flood_k=k, drain=args.drain,
+            arch=sim_arch(d_model=48, n_layers=2, n_heads=4, d_ff=96)))
         kk = k or diam
         print(f"{'full' if k is None else k:>6} "
               f"{flood.staleness_bound(diam, kk):>10} {r.gmp:>7.3f} "

@@ -41,12 +41,44 @@ import networkx as nx
 import numpy as np
 
 from repro.core.messages import (Message, CommLedger, MESSAGE_BYTES,
-                                 digest_bytes)
+                                 digest_bytes, pad_pow2)
 from repro.topology.dynamic import ChurnEvent, DynamicTopology
 
 
 #: ``make_network(backend="auto")`` switches to the bitset engine at this size.
 AUTO_VECTOR_MIN_CLIENTS = 64
+
+#: Sender-step value marking padding columns in dense payload matrices.
+#: Negative on purpose: no real refresh step is negative, so padded entries
+#: can never alias a live subspace epoch (their coefficient is 0 anyway).
+STEP_PAD = -1
+
+
+def pad_payloads(payloads: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
+                 minimum: int = 4):
+    """Stack per-client ragged ``(seeds, coefs, steps)`` payloads into dense
+    ``(n, K)`` matrices with K pow2-bucketed — the batched-jit wire format.
+
+    Padding columns are ``(seed=0, coef=0, step=STEP_PAD)``: a zero
+    coefficient makes the message an exact no-op under SubCGE (zero scatter
+    into A, zero Gaussian axpy), so consumers never need a length mask.
+    Returns ``(n, 0)`` matrices when no client received anything.
+    """
+    n = len(payloads)
+    kmax = max((len(p[0]) for p in payloads), default=0)
+    if kmax == 0:
+        return (np.zeros((n, 0), np.uint32), np.zeros((n, 0), np.float32),
+                np.full((n, 0), STEP_PAD, np.int32))
+    K = pad_pow2(kmax, minimum)
+    seeds = np.zeros((n, K), np.uint32)
+    coefs = np.zeros((n, K), np.float32)
+    steps = np.full((n, K), STEP_PAD, np.int32)
+    for i, (sd, cf, st) in enumerate(payloads):
+        k = len(sd)
+        seeds[i, :k] = sd
+        coefs[i, :k] = cf
+        steps[i, :k] = st
+    return seeds, coefs, steps
 
 
 @dataclasses.dataclass
@@ -131,6 +163,29 @@ class _FloodBase:
         self._catchup = [[] for _ in range(self.n)]
         return out
 
+    def drain_catchup_arrays(self) \
+            -> list[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """:meth:`drain_catchup` in the runner's payload format: per-client
+        ``(seeds, coefs, steps)`` arrays, sender steps included so catch-up
+        replays under the right subspace epoch."""
+        return [(np.asarray([m.seed for m in f], np.uint32),
+                 np.asarray([m.coef for m in f], np.float32),
+                 np.asarray([m.step for m in f], np.int32))
+                for f in self.drain_catchup()]
+
+    def rounds_padded(self, k: int, extra=None, minimum: int = 4):
+        """Run k flood rounds and return dense padded ``(n, K)`` seed/coef/
+        step matrices (see :func:`pad_payloads`) — the single-dispatch input
+        of the batched jit replay.  ``extra`` optionally prepends per-client
+        ``(seeds, coefs, steps)`` payloads (anti-entropy catch-up) so they
+        ride in the same matrices."""
+        payloads = self.rounds_arrays(k)
+        if extra is not None:
+            payloads = [tuple(np.concatenate([np.asarray(e, p.dtype), p])
+                              for e, p in zip(ex, pl))
+                        for ex, pl in zip(extra, payloads)]
+        return pad_payloads(payloads, minimum)
+
     # engine hooks
     def _drop_frontier(self, i: int) -> None:
         raise NotImplementedError
@@ -206,12 +261,16 @@ class FloodNetwork(_FloodBase):
                 fresh[i].extend(got[i])
         return fresh
 
-    def rounds_arrays(self, k: int) -> list[tuple[np.ndarray, np.ndarray]]:
-        """Like :meth:`rounds` but returns per-client (seeds, coefs) arrays —
-        the payload shape the training runner consumes."""
+    def rounds_arrays(self, k: int) \
+            -> list[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Like :meth:`rounds` but returns per-client (seeds, coefs, steps)
+        arrays — the payload shape the training runner consumes.  Sender
+        steps travel with the message so the receiver can replay under the
+        *sender's* subspace epoch."""
         fresh = self.rounds(k)
         return [(np.asarray([m.seed for m in f], np.uint32),
-                 np.asarray([m.coef for m in f], np.float32)) for f in fresh]
+                 np.asarray([m.coef for m in f], np.float32),
+                 np.asarray([m.step for m in f], np.int32)) for f in fresh]
 
     def full_flood(self) -> list[list[Message]]:
         """Flood until quiescent (≥ diameter rounds suffice for synchronous
@@ -258,8 +317,8 @@ class FloodNetwork(_FloodBase):
 class VectorFloodNetwork(_FloodBase):
     """Bitset engine: identical protocol, vectorized state.
 
-    Messages live in an append-only table (parallel ``seeds``/``coefs``
-    numpy arrays); each client's ``S_i`` and ``R_i`` are rows of packed
+    Messages live in an append-only table (parallel ``seeds``/``coefs``/
+    ``steps`` numpy arrays); each client's ``S_i`` and ``R_i`` are rows of packed
     uint8 bit matrices.  One flood round is: per receiver, OR the frontier
     rows of its live neighbours, then ``fresh = inbox & ~seen``;
     ``seen |= fresh``; ``frontier = fresh``.  Ledger counts come from
@@ -275,6 +334,7 @@ class VectorFloodNetwork(_FloodBase):
         self._uid2idx: dict = {}
         self._seeds = np.zeros(self._INITIAL_BITS, np.uint32)
         self._coefs = np.zeros(self._INITIAL_BITS, np.float32)
+        self._steps = np.full(self._INITIAL_BITS, STEP_PAD, np.int32)
         nbytes = self._INITIAL_BITS // 8
         self._seen = np.zeros((self.n, nbytes), np.uint8)
         self._front = np.zeros((self.n, nbytes), np.uint8)
@@ -289,6 +349,8 @@ class VectorFloodNetwork(_FloodBase):
             grow = self._seeds.shape[0]
             self._seeds = np.concatenate([self._seeds, np.zeros(grow, np.uint32)])
             self._coefs = np.concatenate([self._coefs, np.zeros(grow, np.float32)])
+            self._steps = np.concatenate(
+                [self._steps, np.full(grow, STEP_PAD, np.int32)])
             pad = np.zeros((self.n, grow // 8), np.uint8)
             self._seen = np.concatenate([self._seen, pad], axis=1)
             self._front = np.concatenate([self._front, pad], axis=1)
@@ -296,6 +358,7 @@ class VectorFloodNetwork(_FloodBase):
         self._uid2idx[msg.uid] = idx
         self._seeds[idx] = msg.seed
         self._coefs[idx] = msg.coef
+        self._steps[idx] = msg.step
         return idx
 
     @staticmethod
@@ -306,9 +369,27 @@ class VectorFloodNetwork(_FloodBase):
     def _get_bit(mat: np.ndarray, row: int, idx: int) -> bool:
         return bool(mat[row, idx >> 3] & (1 << (idx & 7)))
 
+    def _occ_bytes(self) -> int:
+        """Bytes of the bit rows actually occupied by registered messages —
+        capacity grows geometrically, so unpacking full rows would be
+        O(capacity) per call regardless of how few messages exist."""
+        return (len(self._msgs) + 7) >> 3
+
     def _row_indices(self, bits: np.ndarray) -> np.ndarray:
+        occ = self._occ_bytes()
         return np.flatnonzero(
-            np.unpackbits(bits, bitorder="little")[:len(self._msgs)])
+            np.unpackbits(bits[:occ], bitorder="little")[:len(self._msgs)])
+
+    def _rows_indices(self, bits: np.ndarray) -> list[np.ndarray]:
+        """Per-row set indices for a whole (n, nbytes) bit matrix with ONE
+        unpackbits call over the occupied prefix (the per-row variant costs
+        n separate unpacks)."""
+        occ = self._occ_bytes()
+        if occ == 0:
+            return [np.zeros(0, np.int64)] * bits.shape[0]
+        unpacked = np.unpackbits(bits[:, :occ], axis=1,
+                                 bitorder="little")[:, :len(self._msgs)]
+        return [np.flatnonzero(row) for row in unpacked]
 
     # -- protocol --------------------------------------------------------------
     def inject(self, client: int, msg: Message) -> None:
@@ -376,27 +457,21 @@ class VectorFloodNetwork(_FloodBase):
     def rounds(self, k: int) -> list[list[Message]]:
         return self._materialize(self._rounds_bits(k))
 
-    def rounds_arrays(self, k: int) -> list[tuple[np.ndarray, np.ndarray]]:
-        """Fast path: per-client (seeds, coefs) arrays of the messages newly
-        accepted over k rounds — no Message objects on the hot loop."""
+    def rounds_arrays(self, k: int) \
+            -> list[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Fast path: per-client (seeds, coefs, steps) arrays of the messages
+        newly accepted over k rounds — no Message objects on the hot loop,
+        one unpackbits over the accumulated matrix."""
         acc = self._rounds_bits(k)
-        out = []
-        for i in range(self.n):
-            idx = self._row_indices(acc[i])
-            out.append((self._seeds[idx], self._coefs[idx]))
-        return out
+        return [(self._seeds[idx], self._coefs[idx], self._steps[idx])
+                for idx in self._rows_indices(acc)]
 
     def full_flood(self) -> list[list[Message]]:
         return self.rounds(self.diameter + 1)
 
     def _materialize(self, bits: np.ndarray) -> list[list[Message]]:
-        out: list[list[Message]] = []
-        for i in range(self.n):
-            if bits[i].any():
-                out.append([self._msgs[j] for j in self._row_indices(bits[i])])
-            else:
-                out.append([])
-        return out
+        return [[self._msgs[j] for j in idx]
+                for idx in self._rows_indices(bits)]
 
     # -- churn hooks -----------------------------------------------------------
     def _drop_frontier(self, i: int) -> None:

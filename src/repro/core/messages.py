@@ -1,11 +1,18 @@
 """Seed-scalar messages and byte accounting (paper §3.1, Table 1, Fig. 1).
 
-A SeedFlood wire message is ``(seed, coef)``: a 4-byte uint32 seed and a
-2-byte fp16 coefficient (the paper quotes ~400 KB for 5000 iterations × 16
-clients per edge, i.e. ≈5 B/message; we default to 8 B with a 2-byte header
-to stay conservative).  The ledger tracks *bytes per edge* — the paper's
-communication-cost metric — for every protocol so Fig. 1/3 and Table 8 can be
-reproduced exactly.
+A SeedFlood wire message is ``(seed, coef, step)``: a 4-byte uint32 seed, a
+2-byte fp16 coefficient, and a 2-byte header whose dedup id *is* the sender
+step (uid = (origin, step mod 2^16), matching the ``client_seed`` layout
+where steps fit in 16 bits).  The paper quotes ~400 KB for 5000 iterations ×
+16 clients per edge, i.e. ≈5 B/message; we stay conservative at 8 B.
+
+Carrying the sender step on the wire is load-bearing, not bookkeeping: a
+receiver must replay every message under the SubCGE subspace of the
+*sender's* τ-epoch (``step // τ``), which can differ from its own whenever
+delayed flooding or an outage lets staleness cross a refresh boundary
+(DESIGN.md §6).  The ledger tracks *bytes per edge* — the paper's
+communication-cost metric — for every protocol so Fig. 1/3 and Table 8 can
+be reproduced exactly.
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import dataclasses
 
 SEED_BYTES = 4      # uint32 seed
 COEF_BYTES = 2      # fp16 scalar
-HEADER_BYTES = 2    # dedup id / framing
+HEADER_BYTES = 2    # dedup id == sender step mod 2^16 (uid + epoch replay)
 MESSAGE_BYTES = SEED_BYTES + COEF_BYTES + HEADER_BYTES
 
 # Anti-entropy (DESIGN.md §6): a rejoining client and its sync partner
@@ -29,13 +36,24 @@ def digest_bytes(n_seen: int) -> int:
     return DIGEST_HEADER_BYTES + n_seen * DIGEST_BYTES_PER_MSG
 
 
+def pad_pow2(k: int, minimum: int = 4) -> int:
+    """Smallest power-of-two bucket >= k.  All padded payload widths (the
+    K message columns, the E epoch slots) quantize through this one function
+    so jit retraces stay bounded by a single policy."""
+    n = max(1, minimum)
+    while n < k:
+        n *= 2
+    return n
+
+
 @dataclasses.dataclass(frozen=True)
 class Message:
     """One seed-reconstructible ZO update m = (s, α·η/n)."""
     seed: int          # s_{i,t} — reconstructs the perturbation anywhere
     coef: float        # the *fixed* coefficient (flooding never reweights it)
     origin: int        # producing client (debug/bookkeeping only)
-    step: int          # producing iteration (staleness accounting)
+    step: int          # producing iteration — fixes the sender's subspace
+                       # epoch (step // τ) that any replay must regenerate
 
     @property
     def uid(self) -> tuple[int, int]:

@@ -22,6 +22,7 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def key_from_seed(seed) -> jax.Array:
@@ -45,6 +46,16 @@ def client_seed(base_seed, step, client):
     return (jnp.asarray(base_seed, jnp.uint32)
             + jnp.asarray(step, jnp.uint32) * jnp.uint32(65536)
             + jnp.asarray(client, jnp.uint32)).astype(jnp.uint32)
+
+
+def client_seeds(base_seed: int, step: int, n: int) -> np.ndarray:
+    """All n clients' ``s_{i,t}`` for one step as a numpy uint32 vector.
+
+    Bit-identical to ``client_seed`` (uint32 wraparound matches jnp) but
+    stays on the host: training loops call this every iteration, and a
+    per-step ``jax.vmap(client_seed)`` would re-trace each time."""
+    return (np.uint32(base_seed) + np.uint32(step) * np.uint32(65536)
+            + np.arange(n, dtype=np.uint32))
 
 
 def message_key(seed) -> jax.Array:

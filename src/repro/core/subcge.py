@@ -40,8 +40,10 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import seeds as seedlib
+from repro.core.messages import pad_pow2
 
 
 class UV(NamedTuple):
@@ -271,6 +273,95 @@ def apply_messages(params: Any, meta: dict[str, LeafMeta], cfg: SubCGEConfig,
 
         upd, _ = jax.lax.scan(body, jnp.zeros(m.shape, jnp.float32),
                               (message_seeds, coefs.astype(jnp.float32)))
+        return leaf + upd.astype(leaf.dtype)
+
+    return seedlib.map_with_paths(visit, params)
+
+
+# ---------------------------------------------------------------------------
+# epoch-correct replay: apply each message under ITS SENDER's subspace
+# ---------------------------------------------------------------------------
+#
+# The seed-scalar reconstruction guarantee (paper §3.1) only holds if the
+# receiver regenerates the perturbation the *sender* used.  The canonical
+# coordinates (i, j) depend solely on the message seed, but the subspace
+# (U, V) is a function of the sender's τ-epoch ⌊t_send/τ⌋ — so a message
+# whose staleness crosses a refresh boundary (delayed flooding with k < D,
+# anti-entropy catch-up after an outage) MUST be applied under the epoch of
+# its sender step, not the receiver's current step.  ``apply_messages_epoch``
+# makes this structural: payloads carry sender steps, and the batch is
+# partitioned over the epochs actually present.
+
+#: Sentinel for unused epoch slots (matches no real refresh step, which are
+#: all >= 0; slot coefficients mask to zero so the slot is an exact no-op).
+EPOCH_PAD = -1
+
+
+def epoch_slots(steps, cfg: SubCGEConfig, minimum: int = 1) -> np.ndarray:
+    """Host-side: the distinct subspace refresh steps governing a batch of
+    sender steps, padded with :data:`EPOCH_PAD` to a power-of-two length so
+    jit retraces of the epoch loop stay bounded.
+
+    ``steps`` may be any int array (e.g. the (n, K) padded matrix); negative
+    entries — payload padding — are ignored.
+    """
+    steps = np.asarray(steps)
+    tau = int(cfg.refresh_period)
+    valid = steps[steps >= 0]
+    uniq = np.unique((valid // tau) * tau).astype(np.int32)
+    out = np.full(pad_pow2(uniq.size, minimum), EPOCH_PAD, np.int32)
+    out[:uniq.size] = uniq
+    return out
+
+
+def apply_messages_epoch(params: Any, meta: dict[str, LeafMeta],
+                         cfg: SubCGEConfig, global_seed,
+                         message_seeds: jax.Array, coefs: jax.Array,
+                         steps: jax.Array, epochs: jax.Array) -> Any:
+    """Apply K seed-scalar messages, each under the subspace of its SENDER's
+    τ-epoch (jit-safe; vmaps over a leading client axis).
+
+    message_seeds : (K,) uint32
+    coefs         : (K,)  — 0 entries are exact no-ops (payload padding)
+    steps         : (K,) int32 sender steps (negative = padding)
+    epochs        : (E,) int32 refresh-step slots from :func:`epoch_slots`;
+                    every non-padding message's epoch must appear here
+
+    Matrix leaves get one scatter + U_e A_e V_e^T per epoch slot — with the
+    common single-epoch batch this is exactly :func:`apply_messages`.  Dense
+    Gaussian (non-2D) leaves depend only on the message seed, never the
+    subspace, so they are applied once, epoch-free.
+    """
+    coords_k = jax.vmap(lambda s: sample_coords(meta, cfg, s))(message_seeds)
+    cf32 = coefs.astype(jnp.float32)
+    msg_epoch = refresh_step(steps, cfg)              # (K,) — floor for < 0
+    n_slots = int(epochs.shape[0])                    # static
+    slot_coefs = [jnp.where(msg_epoch == epochs[e], cf32, 0.0)
+                  for e in range(n_slots)]
+    slot_subs = [make_subspace(meta, cfg, global_seed, epochs[e])
+                 for e in range(n_slots)]
+
+    def visit(path: str, leaf: jax.Array):
+        m = meta[path]
+        if m.frozen:
+            return leaf
+        if m.is_matrix:
+            ij = coords_k[path]
+            out = leaf
+            for sub, c_e in zip(slot_subs, slot_coefs):
+                A = scatter_A(ij.i, ij.j, c_e, cfg.rank)
+                out = apply_A(out, sub[path], A)
+            return out
+
+        def body(acc, sc):
+            s, c = sc
+            z = seedlib.gaussian_like(
+                seedlib.leaf_key(seedlib.message_key(s), path),
+                m.shape, jnp.float32)
+            return acc + c * z, None
+
+        upd, _ = jax.lax.scan(body, jnp.zeros(m.shape, jnp.float32),
+                              (message_seeds, cf32))
         return leaf + upd.astype(leaf.dtype)
 
     return seedlib.map_with_paths(visit, params)

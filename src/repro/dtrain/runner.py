@@ -27,6 +27,7 @@ them back through slow averaging — the contrast the churn experiments
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable
 
@@ -42,7 +43,8 @@ from repro.data import synthetic
 from repro.dtrain import lora as loralib
 from repro.models import params as plib
 from repro.models import transformer as tf
-from repro.models.perturb import Pert, nest_subspace, sample_pert
+from repro.models.perturb import (Pert, epoch_subspace, nest_subspace,
+                                  sample_pert)
 from repro.topology import graphs
 from repro.topology.dynamic import ChurnSchedule, DynamicTopology
 
@@ -83,6 +85,20 @@ class DTrainConfig:
     # flood engine: "python" (per-message reference), "numpy" (bitset fast
     # path), or "auto" (numpy once n_clients is large enough to pay off).
     flood_backend: str = "auto"
+    # True: the whole estimate -> local update -> replay pipeline runs as
+    # jit-resident batched calls over the stacked client axis.  False: the
+    # per-client reference path (2n tree-unstack/dispatch/restack cycles per
+    # step) — kept for parity tests and the bench_step speedup baseline.
+    batched_step: bool = True
+    # True (the fix): replay every received message under its SENDER's
+    # subspace epoch.  False pins the legacy receiver-step replay — wrong
+    # whenever staleness crosses a τ boundary; exists only so regression
+    # tests can demonstrate the bug.
+    epoch_replay: bool = True
+    # After the last training step, keep flooding + replaying (no new
+    # injections) until the network is quiescent, so delayed-flooding runs
+    # end with every message delivered (and, with epoch_replay, consensus).
+    drain: bool = False
 
 
 @dataclasses.dataclass
@@ -136,13 +152,6 @@ class _Setup:
         return float(tf.lm_loss(self.arch, avg, {"tokens": toks}))
 
 
-def _pad_pow2(k: int, minimum: int = 4) -> int:
-    n = minimum
-    while n < k:
-        n *= 2
-    return n
-
-
 def _churn_schedule(cfg: DTrainConfig) -> ChurnSchedule | None:
     if cfg.churn is None:
         return None
@@ -180,6 +189,17 @@ def _freeze_offline(new, old, active: np.ndarray):
     return jax.tree.map(f, new, old)
 
 
+def _log_loss(loss_curve: list[float], losses: np.ndarray,
+              active: np.ndarray) -> None:
+    """Mean loss over online clients; under a full outage nobody computed a
+    step, so carry the previous loss instead of averaging an empty slice
+    (NaN + RuntimeWarning)."""
+    if active.any():
+        loss_curve.append(float(np.mean(losses[active])))
+    else:
+        loss_curve.append(loss_curve[-1] if loss_curve else float("nan"))
+
+
 # ---------------------------------------------------------------------------
 # SeedFlood (Algorithm 1)
 # ---------------------------------------------------------------------------
@@ -199,92 +219,146 @@ def run_seedflood(cfg: DTrainConfig) -> RunResult:
                         pert=pert.with_scale(-scfg.eps))
         return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
 
-    @jax.jit
-    def estimate_all(stacked, batch, seeds_t, step):
+    # (A)+(B) fused, batched path: one dispatch over the stacked client axis
+    # computes every ZO estimate, the -η·α/n_eff coefficients, and each
+    # online client's own local update (offline clients get coef 0, an exact
+    # no-op).  Buffers are donated — params update in place.
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def estimate_and_update(stacked, tokens, seeds_t, step, active_f):
         sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
         sub_n = nest_subspace(sub)
         alphas, losses = jax.vmap(
             lambda p, b, sd: local_estimate(p, {"tokens": b}, sd, sub_n)
-        )(stacked, batch["tokens"], seeds_t)
-        return alphas, losses
+        )(stacked, tokens, seeds_t)
+        n_eff = jnp.maximum(jnp.sum(active_f), 1.0)
+        coefs = -cfg.lr * alphas / n_eff
+        own = jnp.where(active_f > 0, coefs, 0.0)
+        new = jax.vmap(lambda p, sd, c: subcge.apply_messages(
+            p, meta, scfg, sub, sd[None], c[None]))(stacked, seeds_t, own)
+        return new, losses, coefs
 
-    apply_cache: dict[int, Callable] = {}
+    # estimate only — the per-client reference path updates in a host loop
+    @jax.jit
+    def estimate_all(stacked, tokens, seeds_t, step):
+        sub_n = epoch_subspace(meta, scfg, cfg.seed, step)
+        return jax.vmap(
+            lambda p, b, sd: local_estimate(p, {"tokens": b}, sd, sub_n)
+        )(stacked, tokens, seeds_t)
 
-    def apply_msgs(params_i, step, seeds_k, coefs_k):
-        K = _pad_pow2(len(seeds_k))
-        if K not in apply_cache:
-            @jax.jit
-            def fn(p, sds, cfs, stp):
-                sub = subcge.subspace_at_step(meta, scfg, cfg.seed, stp)
-                return subcge.apply_messages(p, meta, scfg, sub, sds, cfs)
-            apply_cache[K] = fn
-        sds = np.zeros(K, np.uint32)
-        cfs = np.zeros(K, np.float32)
-        sds[:len(seeds_k)] = seeds_k
-        cfs[:len(coefs_k)] = coefs_k
-        return apply_cache[K](params_i, jnp.asarray(sds), jnp.asarray(cfs), step)
+    @jax.jit
+    def update_one(p, sds, cfs, step):
+        sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+        return subcge.apply_messages(p, meta, scfg, sub, sds, cfs)
+
+    # (C) replay: every received message under ITS SENDER's subspace epoch —
+    # the reconstruction guarantee survives τ-refresh boundaries (delayed
+    # flooding, anti-entropy catch-up).  Batched variant is one dispatch
+    # over the (n, K) padded payload matrices; jax's shape cache bounds
+    # retraces because K and E are pow2-bucketed.
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def replay_batched(stacked, sds, cfs, stp, epochs):
+        return jax.vmap(
+            lambda p, sd, cf, st: subcge.apply_messages_epoch(
+                p, meta, scfg, cfg.seed, sd, cf, st, epochs)
+        )(stacked, sds, cfs, stp)
+
+    @jax.jit
+    def replay_one(p, sds, cfs, stp, epochs):
+        return subcge.apply_messages_epoch(p, meta, scfg, cfg.seed,
+                                           sds, cfs, stp, epochs)
+
+    def replay_payloads(stacked, sds, cfs, stp, t):
+        """Apply one (n, K) padded payload batch to all clients."""
+        if sds.shape[1] == 0:
+            return stacked
+        if not cfg.epoch_replay:
+            # legacy receiver-step replay (regression demonstration only):
+            # pin every live message to the receiver's current epoch
+            stp = np.where(cfs != 0.0, np.int32(t), np.int32(flood.STEP_PAD))
+        epochs = jnp.asarray(subcge.epoch_slots(stp, scfg))
+        if cfg.batched_step:
+            return replay_batched(stacked, jnp.asarray(sds), jnp.asarray(cfs),
+                                  jnp.asarray(stp), epochs)
+        new_stacked = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda l: l[i], stacked)
+            if (cfs[i] != 0.0).any():
+                p_i = replay_one(p_i, jnp.asarray(sds[i]), jnp.asarray(cfs[i]),
+                                 jnp.asarray(stp[i]), epochs)
+            new_stacked.append(p_i)
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
 
     # ---- training loop ------------------------------------------------------
     stacked = s.stacked
     active = net.active_mask()
     loss_curve, acc_curve, consensus_curve = [], [], []
+    step_wall_s = []     # per-step seconds ([0] includes compile; bench_step)
     t0 = time.time()
     for t in range(cfg.steps):
+        t_step = time.perf_counter()
         # churn events land at the start of the step; rejoined clients carry
         # their anti-entropy catch-up messages into this step's apply phase
-        pending: list[list[Message]] = [[] for _ in range(n)]
+        pending = None
         if churn is not None and churn.events_at(t):
             net.apply_churn(churn.events_at(t))
             active = net.active_mask()
-            pending = net.drain_catchup()
+            pending = net.drain_catchup_arrays()
         # full flooding tracks the *effective* diameter, which churn moves
         k_hops = cfg.flood_k if cfg.flood_k is not None else net.diameter
 
         batch = s.batches(t)
-        seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
-        alphas, losses = estimate_all(stacked, batch, seeds_t, t)
-        alphas = np.asarray(alphas)
-        loss_curve.append(float(np.mean(np.asarray(losses)[active])))
+        seeds_np = seedlib.client_seeds(cfg.seed, t, n)   # hoisted: no retrace
+        seeds_t = jnp.asarray(seeds_np)
 
-        n_eff = max(int(active.sum()), 1)   # == n on a static topology
-        coefs = -cfg.lr * alphas / n_eff
-        # (B) local update: each online client applies its own message
-        # immediately; offline clients freeze (no step, no message)
-        seeds_np = np.asarray(seeds_t)
-        new_stacked = []
+        if cfg.batched_step:
+            stacked, losses, coefs_j = estimate_and_update(
+                stacked, batch["tokens"], seeds_t, t,
+                jnp.asarray(active, jnp.float32))
+            coefs = np.asarray(coefs_j)
+        else:
+            alphas, losses = estimate_all(stacked, batch["tokens"], seeds_t, t)
+            n_eff = max(int(active.sum()), 1)   # == n on a static topology
+            # float32 like the fused path (numpy would silently promote)
+            coefs = (-cfg.lr * np.asarray(alphas) / n_eff).astype(np.float32)
+            # (B) local update: each online client applies its own message
+            # immediately; offline clients freeze (no step, no message)
+            new_stacked = []
+            for i in range(n):
+                p_i = jax.tree.map(lambda l: l[i], stacked)
+                if active[i]:
+                    p_i = update_one(p_i, seeds_t[i:i + 1],
+                                     jnp.asarray(coefs[i:i + 1]), t)
+                new_stacked.append(p_i)
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+        _log_loss(loss_curve, np.asarray(losses), active)
+
+        # (C) online clients inject their fresh messages into the flood
         for i in range(n):
-            p_i = jax.tree.map(lambda l: l[i], stacked)
             if active[i]:
-                p_i = apply_msgs(p_i, t, seeds_np[i:i + 1], coefs[i:i + 1])
-                # (C) inject into the flood network
                 net.inject(i, Message(seed=int(seeds_np[i]),
                                       coef=float(coefs[i]), origin=i, step=t))
-            new_stacked.append(p_i)
-        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
 
         # flooding: k hops per local iteration (frontiers persist — delayed
-        # flooding semantics when k < diameter)
-        payloads = net.rounds_arrays(k_hops)
-        new_stacked = []
-        for i in range(n):
-            sds, cfs = payloads[i]
-            if pending[i]:   # anti-entropy catch-up applies like fresh floods
-                sds = np.concatenate([np.asarray([m.seed for m in pending[i]],
-                                                 np.uint32), sds])
-                cfs = np.concatenate([np.asarray([m.coef for m in pending[i]],
-                                                 np.float32), cfs])
-            p_i = jax.tree.map(lambda l: l[i], stacked)
-            if len(sds):
-                # NOTE: messages are applied under the sender's-step subspace;
-                # with τ ≥ staleness (incl. outage length) this matches the
-                # sender exactly.
-                p_i = apply_msgs(p_i, t, sds, cfs)
-            new_stacked.append(p_i)
-        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+        # flooding semantics when k < diameter); anti-entropy catch-up rides
+        # in front of fresh floods in the same padded matrices
+        sds, cfs, stp = net.rounds_padded(k_hops, extra=pending)
+        stacked = replay_payloads(stacked, sds, cfs, stp, t)
+        jax.block_until_ready(stacked)
+        step_wall_s.append(time.perf_counter() - t_step)
 
         if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
             acc_curve.append((t + 1, s.gmp(stacked)))
             consensus_curve.append((t + 1, _active_consensus(stacked, active)))
+
+    if cfg.drain:
+        # flush in-flight delayed-flooding messages: flood + replay with no
+        # new injections until quiescent, so every sent message is applied
+        for _ in range(cfg.steps + 1):
+            if net.in_flight() == 0:
+                break
+            sds, cfs, stp = net.rounds_padded(net.diameter + 1)
+            stacked = replay_payloads(stacked, sds, cfs, stp, cfg.steps)
 
     gmp = s.gmp(stacked)
     k_label = cfg.flood_k if cfg.flood_k is not None else net.diameter
@@ -297,7 +371,9 @@ def run_seedflood(cfg: DTrainConfig) -> RunResult:
         extra={"n_messages": net.ledger.n_messages, "diameter": net.diameter,
                "n_params": s.n_params, "consensus_curve": consensus_curve,
                "sync_bytes": net.ledger.sync_bytes,
-               "n_syncs": net.ledger.n_syncs})
+               "n_syncs": net.ledger.n_syncs,
+               "step_wall_s": step_wall_s,
+               "final_stacked": stacked})
 
 
 # ---------------------------------------------------------------------------
@@ -382,13 +458,13 @@ def _gossip_common(cfg: DTrainConfig, *, zeroth_order: bool, use_lora: bool,
 
         batch = s.batches(t)
         if zeroth_order:
-            seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
+            seeds_t = jnp.asarray(seedlib.client_seeds(cfg.seed, t, n))
             new_trainable, stat = local_steps(base, trainable, batch, seeds_t)
         else:
             new_trainable, stat = local_steps(base, trainable, batch)
         trainable = (_freeze_offline(new_trainable, trainable, active)
                      if topo is not None else new_trainable)
-        loss_curve.append(float(np.mean(np.asarray(stat)[active])))
+        _log_loss(loss_curve, np.asarray(stat), active)
 
         if (t + 1) % cfg.local_iters == 0:
             if choco:
@@ -446,7 +522,7 @@ def run_gossip_sr(cfg: DTrainConfig) -> RunResult:
 
     @jax.jit
     def estimate_all(stacked_p, batch, seeds_t, step):
-        sub = nest_subspace(subcge.subspace_at_step(meta, scfg, cfg.seed, step))
+        sub = epoch_subspace(meta, scfg, cfg.seed, step)
         def one(p, toks, sd):
             pert = sample_pert(meta, scfg, sd, scfg.eps)
             lp = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub, pert=pert)
@@ -455,28 +531,32 @@ def run_gossip_sr(cfg: DTrainConfig) -> RunResult:
             return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
         return jax.vmap(one)(stacked_p, batch["tokens"], seeds_t)
 
-    apply_cache: dict[int, Callable] = {}
+    @jax.jit
+    def apply_deltas_fn(p, ss, cc, stp, epochs):
+        return subcge.apply_messages_epoch(p, meta, scfg, cfg.seed,
+                                           ss, cc, stp, epochs)
 
-    def apply_deltas(p_i, step, sds, cfs):
-        K = _pad_pow2(len(sds))
-        if K not in apply_cache:
-            @jax.jit
-            def fn(p, ss, cc, stp):
-                sub = subcge.subspace_at_step(meta, scfg, cfg.seed, stp)
-                return subcge.apply_messages(p, meta, scfg, sub, ss, cc)
-            apply_cache[K] = fn
+    def apply_deltas(p_i, sds, cfs, sts):
+        """Epoch-correct delta replay: a reweighted coefficient for message
+        (i, t0) must re-apply under the subspace of ITS origin step t0 —
+        history reweighting routinely reaches across τ boundaries."""
+        K = flood.pad_pow2(len(sds))
         pad_s = np.zeros(K, np.uint32); pad_s[:len(sds)] = sds
         pad_c = np.zeros(K, np.float32); pad_c[:len(cfs)] = cfs
-        return apply_cache[K](p_i, jnp.asarray(pad_s), jnp.asarray(pad_c), step)
+        pad_t = np.full(K, flood.STEP_PAD, np.int32); pad_t[:len(sts)] = sts
+        epochs = jnp.asarray(subcge.epoch_slots(pad_t, scfg))
+        return apply_deltas_fn(p_i, jnp.asarray(pad_s), jnp.asarray(pad_c),
+                               jnp.asarray(pad_t), epochs)
 
     loss_curve = []
     reconstructions = 0
     t0 = time.time()
     for t in range(cfg.steps):
         batch = s.batches(t)
-        seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
+        seeds_np = seedlib.client_seeds(cfg.seed, t, n)
+        seeds_t = jnp.asarray(seeds_np)
         alphas, losses = estimate_all(stacked, batch, seeds_t, t)
-        alphas = np.asarray(alphas); seeds_np = np.asarray(seeds_t)
+        alphas = np.asarray(alphas)
         loss_curve.append(float(np.mean(np.asarray(losses))))
         for i in range(n):
             uid = (i, t)
@@ -506,17 +586,18 @@ def run_gossip_sr(cfg: DTrainConfig) -> RunResult:
         new_stacked = []
         for i in range(n):
             p_i = jax.tree.map(lambda l: l[i], stacked)
-            sds, cfs = [], []
+            sds, cfs, sts = [], [], []
             for uid, (sd, a_scaled, c) in hist[i].items():
                 prev = applied[i].get(uid, 0.0)
                 delta = c * a_scaled - prev
                 if abs(delta) > 0:
-                    sds.append(sd); cfs.append(delta)
+                    sds.append(sd); cfs.append(delta); sts.append(uid[1])
                     applied[i][uid] = c * a_scaled
             if sds:
                 reconstructions += len(sds)
-                p_i = apply_deltas(p_i, t, np.asarray(sds, np.uint32),
-                                   np.asarray(cfs, np.float32))
+                p_i = apply_deltas(p_i, np.asarray(sds, np.uint32),
+                                   np.asarray(cfs, np.float32),
+                                   np.asarray(sts, np.int32))
             new_stacked.append(p_i)
         stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
 
@@ -575,7 +656,7 @@ def run_central_zo(cfg: DTrainConfig) -> RunResult:
     t0 = time.time()
     for t in range(cfg.steps):
         batch = s.batches(t)
-        seeds_t = jax.vmap(lambda i: seedlib.client_seed(cfg.seed, t, i))(jnp.arange(n))
+        seeds_t = jnp.asarray(seedlib.client_seeds(cfg.seed, t, n))
         params, velocity, loss = step_fn(params, velocity, batch, seeds_t, t)
         loss_curve.append(float(loss))
 

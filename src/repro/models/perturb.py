@@ -59,6 +59,19 @@ def nest_subspace(sub_flat: dict[str, UV]) -> Any:
     return plib.nest(sub_flat)
 
 
+def epoch_subspace(meta: dict[str, LeafMeta], cfg: SubCGEConfig, global_seed,
+                   step) -> Any:
+    """Nested shared (U, V) tree for the τ-epoch governing ``step`` (jit-safe).
+
+    Sampling is epoch-parameterized *only* through the subspace: a message's
+    coordinates and dense Gaussians (``sample_pert``) depend on the message
+    seed alone, so reconstructing a sender's perturbation elsewhere needs
+    exactly this subspace — regenerated at the SENDER's epoch — and nothing
+    else.  The fused forward consumes the nested layout this returns.
+    """
+    return nest_subspace(subcge.subspace_at_step(meta, cfg, global_seed, step))
+
+
 def _child(tree: Any, k: str):
     if tree is None or not isinstance(tree, dict):
         return None

@@ -1,0 +1,272 @@
+"""Subspace-epoch-correct message replay (the ISSUE 2 bugfix) + the batched
+jit-resident SeedFlood step.
+
+A seed-scalar message reconstructs the sender's exact update only if the
+receiver regenerates the subspace of the SENDER's τ-epoch.  These tests pin:
+
+* unit level  — ``apply_messages_epoch`` matches the sender bitwise across a
+  refresh boundary, while the legacy receiver-step replay provably differs;
+* wire level  — payload matrices carry sender steps; coef-0 padding columns
+  are exact no-ops;
+* runner level — delayed flooding (k < D, τ < staleness) and churn outages
+  that cross a τ boundary re-converge to consensus under the fix, and
+  measurably diverge when ``epoch_replay=False`` pins the old behavior;
+* batched path — the single-dispatch jit step coincides with the per-client
+  reference path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flood, seeds as seedlib, subcge
+from repro.core.messages import Message
+from repro.core.subcge import SubCGEConfig
+from repro.dtrain.runner import DTrainConfig, run, sim_arch
+from repro.topology import graphs
+from repro.topology.dynamic import ChurnEvent, ChurnSchedule
+
+
+# ---------------------------------------------------------------------------
+# unit level: apply_messages_epoch
+# ---------------------------------------------------------------------------
+
+CFG = SubCGEConfig(rank=5, refresh_period=10, eps=1e-3)
+
+
+def _params():
+    return {
+        "blk": {"w": jnp.zeros((3, 16, 24)), "bias": jnp.zeros((24,))},
+        "emb": jnp.zeros((64, 16)),
+    }
+
+
+def _meta(params):
+    return subcge.infer_meta(
+        params, n_batch_dims_fn=lambda p, l: 1 if p == "blk/w" else 0)
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_epoch_slots_unique_padded():
+    steps = np.array([[0, 3, -1], [12, 19, 9]])
+    slots = subcge.epoch_slots(steps, CFG)          # epochs {0, 10}
+    assert slots.dtype == np.int32
+    assert sorted(slots[slots >= 0].tolist()) == [0, 10]
+    assert slots.shape[0] == 2                      # pow2, no pad needed
+    three = subcge.epoch_slots(np.array([0, 10, 20]), CFG)
+    assert three.shape[0] == 4 and three[3] == subcge.EPOCH_PAD
+
+
+def test_single_epoch_equals_apply_messages():
+    """With every sender step in one τ-window, the epoch path degenerates to
+    the plain vectorized aggregation, bitwise."""
+    params = _params()
+    meta = _meta(params)
+    seeds_k = jnp.asarray([11, 22, 33], jnp.uint32)
+    coefs = jnp.asarray([0.5, -1.5, 2.0], jnp.float32)
+    steps = jnp.asarray([3, 7, 9], jnp.int32)       # all in epoch 0
+    sub = subcge.subspace_at_step(meta, CFG, 0, 3)
+    want = subcge.apply_messages(params, meta, CFG, sub, seeds_k, coefs)
+    got = subcge.apply_messages_epoch(
+        params, meta, CFG, 0, seeds_k, coefs, steps,
+        jnp.asarray(subcge.epoch_slots(np.asarray(steps), CFG)))
+    _leaves_equal(got, want)
+
+
+def test_replay_matches_sender_across_refresh_bitwise():
+    """THE bug: a message sent at t=8 (epoch 0) replayed at t=13 (epoch 1)
+    must reproduce the sender's applied update exactly.  The epoch-aware
+    replay is bitwise-identical to the sender; the legacy receiver-step
+    replay applies a different subspace and visibly diverges."""
+    params = _params()
+    meta = _meta(params)
+    t_send, t_recv = 8, 13
+    seed = jnp.asarray(seedlib.client_seeds(0, t_send, 4)[2:3])
+    coef = jnp.asarray([0.37], jnp.float32)
+
+    sender = subcge.apply_messages(
+        params, meta, CFG, subcge.subspace_at_step(meta, CFG, 0, t_send),
+        seed, coef)
+    replay = subcge.apply_messages_epoch(
+        params, meta, CFG, 0, seed, coef, jnp.asarray([t_send], jnp.int32),
+        jnp.asarray(subcge.epoch_slots(np.asarray([t_send]), CFG)))
+    _leaves_equal(replay, sender)
+
+    # the old step=t_recv replay reconstructs under the wrong (U, V)
+    legacy = subcge.apply_messages(
+        params, meta, CFG, subcge.subspace_at_step(meta, CFG, 0, t_recv),
+        seed, coef)
+    gap = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+              for a, b in [(legacy["emb"], sender["emb"]),
+                           (legacy["blk"]["w"], sender["blk"]["w"])])
+    assert gap > 1e-3
+
+
+def test_mixed_epoch_batch_equals_per_epoch_groups():
+    """One batch spanning two τ-windows == applying each window's group under
+    its own subspace (any grouping — the update is additive per message)."""
+    params = _params()
+    meta = _meta(params)
+    seeds_k = jnp.asarray([5, 6, 7, 8], jnp.uint32)
+    coefs = jnp.asarray([1.0, -2.0, 0.5, 3.0], jnp.float32)
+    steps = jnp.asarray([4, 17, 9, 12], jnp.int32)  # epochs {0, 10}
+    got = subcge.apply_messages_epoch(
+        params, meta, CFG, 0, seeds_k, coefs, steps,
+        jnp.asarray(subcge.epoch_slots(np.asarray(steps), CFG)))
+    grouped = params
+    for lo in (0, 10):
+        sel = np.asarray((np.asarray(steps) // 10) * 10 == lo)
+        sub = subcge.subspace_at_step(meta, CFG, 0, lo)
+        grouped = subcge.apply_messages(
+            grouped, meta, CFG, sub, jnp.asarray(np.asarray(seeds_k)[sel]),
+            jnp.asarray(np.asarray(coefs)[sel]))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(grouped)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_padding_columns_are_exact_noops():
+    params = _params()
+    meta = _meta(params)
+    seeds_k = np.asarray([11, 22, 33], np.uint32)
+    coefs = np.asarray([0.5, -1.5, 2.0], np.float32)
+    steps = np.asarray([3, 14, 25], np.int32)
+    epochs = jnp.asarray(subcge.epoch_slots(steps, CFG))
+    bare = subcge.apply_messages_epoch(
+        params, meta, CFG, 0, jnp.asarray(seeds_k), jnp.asarray(coefs),
+        jnp.asarray(steps), epochs)
+    sds, cfs, stp = flood.pad_payloads([(seeds_k, coefs, steps)], minimum=8)
+    padded = subcge.apply_messages_epoch(
+        params, meta, CFG, 0, jnp.asarray(sds[0]), jnp.asarray(cfs[0]),
+        jnp.asarray(stp[0]), epochs)
+    _leaves_equal(padded, bare)
+
+
+# ---------------------------------------------------------------------------
+# wire level: payloads carry sender steps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", [flood.FloodNetwork,
+                                    flood.VectorFloodNetwork])
+def test_rounds_arrays_carry_sender_steps(engine):
+    net = engine(graphs.ring(6))
+    for step in (0, 1):
+        for i in range(6):
+            net.inject(i, Message(seed=100 * step + i, coef=0.5, origin=i,
+                                  step=step))
+        net.rounds(1)   # one hop: step-0 messages still in flight at inject 1
+    sds, cfs, stp = net.rounds_padded(10)
+    assert stp.shape == sds.shape == cfs.shape
+    live = cfs != 0.0
+    assert set(np.unique(stp[live])) <= {0, 1}
+    assert (stp[~live] == flood.STEP_PAD).all()
+    # each live entry's step matches the step encoded in its seed
+    assert (sds[live] // 100 == stp[live]).all()
+
+
+def test_drain_catchup_arrays_format():
+    net = flood.FloodNetwork(graphs.meshgrid(16))
+    for i in range(16):
+        if i != 5:
+            net.inject(i, Message(seed=1000 + i, coef=0.5, origin=i, step=7))
+    net.apply_churn([ChurnEvent(0, "leave", nodes=(5,))])
+    net.full_flood()
+    net.apply_churn([ChurnEvent(1, "join", nodes=(5,))])
+    catch = net.drain_catchup_arrays()
+    sds, cfs, stp = catch[5]
+    assert len(sds) == 15 and (stp == 7).all() and (cfs == 0.5).all()
+
+
+# ---------------------------------------------------------------------------
+# runner level: cross-epoch staleness re-converges only under the fix
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(method="seedflood", n_clients=6, topology="ring", steps=8,
+                lr=1e-2, batch_size=4, subcge_rank=8, local_iters=2,
+                arch=sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64))
+    base.update(kw)
+    return DTrainConfig(**base)
+
+
+def test_delayed_flooding_across_refresh_coincides_only_with_epoch_replay():
+    """flood_k=1 on a 6-ring (D=3, staleness ≤ 3) with τ=2 < staleness:
+    most messages are replayed in a later τ-window than they were sent.
+    After draining, every client has applied the identical message multiset,
+    each under its sender's epoch — consensus to float-noise.  Pinning the
+    legacy receiver-step replay reconstructs wrong perturbations and leaves
+    clients orders of magnitude apart."""
+    fixed = run(_cfg(flood_k=1, subcge_tau=2, drain=True))
+    assert fixed.consensus_error < 1e-7
+    buggy = run(_cfg(flood_k=1, subcge_tau=2, drain=True, epoch_replay=False))
+    assert buggy.consensus_error > 1e-4
+    assert buggy.consensus_error > 1e4 * max(fixed.consensus_error, 1e-12)
+
+
+def test_churn_outage_across_refresh_coincides_only_with_epoch_replay():
+    """A client offline across a τ boundary receives anti-entropy catch-up
+    from older epochs; replaying it under the rejoin-time subspace (the old
+    behavior) permanently forks that client."""
+    churn = ChurnSchedule.leave_rejoin([2], leave_at=1, rejoin_at=5)
+    fixed = run(_cfg(subcge_tau=3, churn=churn, drain=True))
+    assert fixed.extra["n_syncs"] >= 1
+    assert fixed.consensus_error < 1e-7
+    buggy = run(_cfg(subcge_tau=3, churn=churn, drain=True,
+                     epoch_replay=False))
+    assert buggy.consensus_error > 1e-4
+
+
+def test_full_outage_keeps_loss_finite_and_carries_previous():
+    """Satellite bugfix: a churn event taking EVERY client offline used to
+    make the loss log np.mean of an empty slice (NaN + RuntimeWarning)."""
+    churn = ChurnSchedule([
+        ChurnEvent(2, "leave", nodes=(0, 1, 2, 3, 4, 5)),
+        ChurnEvent(4, "join", nodes=(0, 1, 2, 3, 4, 5))])
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        r = run(_cfg(steps=6, churn=churn))
+    assert np.isfinite(r.loss_curve).all()
+    assert r.loss_curve[2] == r.loss_curve[1]   # carried through the outage
+    assert r.loss_curve[3] == r.loss_curve[1]
+    assert r.consensus_error < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# batched jit step == per-client reference
+# ---------------------------------------------------------------------------
+
+def test_batched_step_matches_per_client_reference():
+    """One fused dispatch over the stacked client axis reproduces the
+    per-client unstack/apply/restack loop at n=8 within float32 round-off
+    (atol 1e-6 for one full estimate→update→replay step).  Longer horizons
+    amplify that round-off through the ZO estimator — covered separately."""
+    kw = dict(n_clients=8, steps=1)
+    a = run(_cfg(**kw))
+    b = run(_cfg(**kw, batched_step=False))
+    np.testing.assert_allclose(a.loss_curve, b.loss_curve, rtol=0, atol=1e-6)
+    for x, y in zip(jax.tree.leaves(a.extra["final_stacked"]),
+                    jax.tree.leaves(b.extra["final_stacked"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+    # cross-epoch delayed flooding: one extra step of ZO noise amplification
+    kw = dict(n_clients=8, steps=2, flood_k=1, subcge_tau=2)
+    a = run(_cfg(**kw))
+    b = run(_cfg(**kw, batched_step=False))
+    for x, y in zip(jax.tree.leaves(a.extra["final_stacked"]),
+                    jax.tree.leaves(b.extra["final_stacked"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_batched_step_tracks_reference_over_long_horizon():
+    """Over more steps the ZO estimator amplifies float32 round-off
+    ((lp-lm)/2ε ≈ 500× per step), so long-horizon agreement is statistical:
+    same loss trajectory at the tolerance the central-oracle test uses."""
+    a = run(_cfg(steps=8))
+    b = run(_cfg(steps=8, batched_step=False))
+    np.testing.assert_allclose(a.loss_curve, b.loss_curve,
+                               rtol=1e-4, atol=1e-4)
+    assert a.total_bytes == b.total_bytes
