@@ -37,6 +37,18 @@ from repro.models import transformer as tf
 from repro.topology import graphs
 
 
+#: Every RunResult produced by a benchmark, as JSON-safe dicts
+#: (RunResult.to_json coerces numpy/JAX scalars) — benchmarks.run --json
+#: dumps these alongside the CSV rows.
+RUN_LOG: list[dict] = []
+
+
+def _run(cfg):
+    r = run(cfg)
+    RUN_LOG.append(r.to_json())
+    return r
+
+
 def _arch(fast):
     return sim_arch(d_model=48 if fast else 64, n_layers=2, n_heads=4,
                     d_ff=96 if fast else 128)
@@ -59,7 +71,7 @@ def fig1_comm_vs_perf(fast: bool = True):
     methods = ["seedflood", "dzsgd", "dsgd", "dsgd_lora", "choco",
                "choco_lora"]
     for m in methods:
-        r = run(_base_cfg(fast, method=m))
+        r = _run(_base_cfg(fast, method=m))
         rows.append((f"fig1/{m}", f"{r.gmp:.4f}",
                      f"bytes_per_edge={r.bytes_per_edge:.0f}"))
     return rows
@@ -71,7 +83,7 @@ def table2_client_scaling(fast: bool = True):
     base = {}
     for m in ("seedflood", "dsgd"):
         for n in sizes:
-            r = run(_base_cfg(fast, method=m, n_clients=n))
+            r = _run(_base_cfg(fast, method=m, n_clients=n))
             if (m, "base") not in base:
                 base[(m, "base")] = r.gmp or 1.0
             rel = 100.0 * r.gmp / max(base[("dsgd", "base")]
@@ -122,12 +134,12 @@ def fig6_rank_tau(fast: bool = True):
     rows = []
     ranks = [2, 16] if fast else [2, 8, 16, 64]
     for r_ in ranks:
-        r = run(_base_cfg(fast, method="seedflood", subcge_rank=r_))
+        r = _run(_base_cfg(fast, method="seedflood", subcge_rank=r_))
         rows.append((f"fig6/rank={r_}", f"{r.gmp:.4f}",
                      f"loss_end={np.mean(r.loss_curve[-5:]):.4f}"))
     taus = [5, 1000] if fast else [5, 50, 1000]
     for tau in taus:
-        r = run(_base_cfg(fast, method="seedflood", subcge_tau=tau))
+        r = _run(_base_cfg(fast, method="seedflood", subcge_tau=tau))
         rows.append((f"fig6/tau={tau}", f"{r.gmp:.4f}",
                      f"loss_end={np.mean(r.loss_curve[-5:]):.4f}"))
     return rows
@@ -137,11 +149,11 @@ def fig7_delayed_flooding(fast: bool = True):
     rows = []
     n = 8 if fast else 16
     ks = [1, 2, 4] if fast else [1, 2, 4, 8]
-    full = run(_base_cfg(fast, method="seedflood", n_clients=n))
+    full = _run(_base_cfg(fast, method="seedflood", n_clients=n))
     rows.append((f"fig7/k=full(D)", f"{full.gmp:.4f}",
                  f"consensus={full.consensus_error:.1e}"))
     for k in ks:
-        r = run(_base_cfg(fast, method="seedflood", n_clients=n, flood_k=k))
+        r = _run(_base_cfg(fast, method="seedflood", n_clients=n, flood_k=k))
         rows.append((f"fig7/k={k}", f"{r.gmp:.4f}",
                      f"consensus={r.consensus_error:.1e}"))
     return rows
@@ -150,9 +162,9 @@ def fig7_delayed_flooding(fast: bool = True):
 def table1_cost_model(fast: bool = True):
     """Measured bytes + apply counts for the three §3 regimes."""
     rows = []
-    sf = run(_base_cfg(fast, method="seedflood", steps=10))
-    gsr = run(_base_cfg(fast, method="gossip_sr", steps=10, local_iters=2))
-    dz = run(_base_cfg(fast, method="dzsgd", steps=10))
+    sf = _run(_base_cfg(fast, method="seedflood", steps=10))
+    gsr = _run(_base_cfg(fast, method="gossip_sr", steps=10, local_iters=2))
+    dz = _run(_base_cfg(fast, method="dzsgd", steps=10))
     n_params = sf.extra["n_params"]
     rows.append(("table1/traditional_gossip_bytes", f"{dz.total_bytes:.0f}",
                  f"O(d): d={n_params}"))
@@ -217,8 +229,8 @@ def beyond_subspace_momentum(fast: bool = True):
     optimizer state per leaf, consensus-safe).  Same message stream, better
     optimizer."""
     rows = []
-    plain = run(_base_cfg(fast, method="central_zo"))
-    mom = run(_base_cfg(fast, method="central_zo", momentum=0.9, lr=1e-3))
+    plain = _run(_base_cfg(fast, method="central_zo"))
+    mom = _run(_base_cfg(fast, method="central_zo", momentum=0.9, lr=1e-3))
     rows.append(("beyond/zo_sgd", f"{plain.gmp:.4f}",
                  f"loss_end={np.mean(plain.loss_curve[-10:]):.4f}"))
     rows.append(("beyond/zo_subspace_momentum", f"{mom.gmp:.4f}",
@@ -288,7 +300,7 @@ def beyond_churn_recovery(fast: bool = True):
         tuple(range(0, n, 4)), steps // 4, 3 * steps // 4)
     rows = []
     for method in ("seedflood", "dzsgd"):
-        r = run(_base_cfg(fast, method=method, n_clients=n,
+        r = _run(_base_cfg(fast, method=method, n_clients=n,
                           topology="meshgrid", steps=steps, churn=churn,
                           local_iters=2))
         rows.append((f"beyond/churn/{method}", f"{r.consensus_error:.3e}",

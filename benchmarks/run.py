@@ -1,13 +1,17 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5,...]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5,...] \
+        [--json results.json]
 
 Default (fast) mode keeps every benchmark CPU-tractable; --full uses the
 paper-scale settings where feasible.  Dry-run roofline rows are included
 when results/dryrun/*.json exist (produced by repro.launch.dryrun_all).
+``--json`` additionally dumps every CSV row plus every full RunResult
+(via RunResult.to_json, so numpy/JAX scalars never break serialization).
 """
 import argparse
+import json
 import time
 
 
@@ -18,12 +22,22 @@ def main(argv=None) -> None:
     p.add_argument("--full", action="store_true")
     p.add_argument("--only", default="")
     p.add_argument("--skip-roofline", action="store_true")
+    p.add_argument("--json", default="",
+                   help="also write rows + RunResult dumps to this file")
     args = p.parse_args(argv)
+
+    paper_tables.RUN_LOG.clear()   # per-invocation, not per-process
 
     names = list(paper_tables.ALL)
     if args.only:
         names = [n for n in names
                  if any(tok in n for tok in args.only.split(","))]
+
+    all_rows = []
+
+    def emit(tag, val, derived):
+        all_rows.append({"name": tag, "value": val, "derived": derived})
+        print(f"{tag},{val},{derived}", flush=True)
 
     print("name,us_per_call,derived")
     for name in names:
@@ -32,20 +46,26 @@ def main(argv=None) -> None:
         try:
             rows = fn(fast=not args.full)
         except Exception as e:  # keep the harness running
-            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            emit(name, "ERROR", f"{type(e).__name__}: {e}")
             continue
         for tag, val, derived in rows:
-            print(f"{tag},{val},{derived}", flush=True)
-        print(f"{name}/_wall,{(time.time()-t0)*1e6:.0f},benchmark wall time",
-              flush=True)
+            emit(tag, val, derived)
+        emit(f"{name}/_wall", f"{(time.time()-t0)*1e6:.0f}",
+             "benchmark wall time")
 
     if not args.skip_roofline:
         try:
             recs = roofline_table.load()
             for tag, val, derived in roofline_table.csv_rows(recs):
-                print(f"{tag},{val},{derived}")
+                emit(tag, val, derived)
         except Exception as e:
-            print(f"roofline,ERROR,{e}")
+            emit("roofline", "ERROR", str(e))
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": all_rows, "runs": paper_tables.RUN_LOG}, f,
+                      indent=2)
+        print(f"wrote {args.json} ({len(paper_tables.RUN_LOG)} runs)")
 
 
 if __name__ == "__main__":

@@ -35,7 +35,15 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
         json.dump(metadata or {}, f, indent=2, default=str)
 
 
-def load(path: str, like: Any | None = None) -> tuple[Any, dict]:
+def load(path: str, like: Any | None = None,
+         to_jax: bool = True) -> tuple[Any, dict]:
+    """Restore a checkpoint tree (+ its JSON metadata).
+
+    ``to_jax=False`` keeps leaves as the exact numpy arrays that were saved
+    — jnp conversion would downcast int64/float64 under disabled x64, which
+    matters for trainer/transport state (message coefficients, bitsets),
+    not just be a device transfer.
+    """
     with np.load(path if path.endswith(".npz") else path + ".npz") as z:
         flat: dict[str, np.ndarray] = {}
         for k in z.files:
@@ -50,7 +58,8 @@ def load(path: str, like: Any | None = None) -> tuple[Any, dict]:
     if os.path.exists(meta_path):
         with open(meta_path) as f:
             meta = json.load(f)
-    tree = plib.nest({k: jnp.asarray(v) for k, v in flat.items()})
+    tree = plib.nest({k: (jnp.asarray(v) if to_jax else v)
+                      for k, v in flat.items()})
     if like is not None:
         ref_flat = plib.flatten_paths(like)
         got_flat = plib.flatten_paths(tree)

@@ -193,6 +193,39 @@ class _FloodBase:
     def _anti_entropy(self, a: int, b: int, report: SyncReport) -> None:
         raise NotImplementedError
 
+    # -- checkpointing ---------------------------------------------------------
+    #
+    # A flood network is run state: in-flight frontiers (delayed flooding),
+    # seen-sets (dedup), the message table, pending anti-entropy catch-up and
+    # the topology overlay all shape future rounds and byte accounting, so a
+    # bitwise resume must capture them.  ``state_dict`` returns
+    # ``(arrays, meta)``: an array-valued pytree for the .npz side of a
+    # checkpoint and a JSON-serializable dict for its metadata.  Frontier and
+    # catch-up index arrays are ORDERED — forwarding order determines payload
+    # order, which determines float-summation order downstream.
+
+    def _messages_arrays(self, msgs: list[Message]) -> dict:
+        return {
+            "seed": np.asarray([m.seed for m in msgs], np.int64),
+            "coef": np.asarray([m.coef for m in msgs], np.float64),
+            "origin": np.asarray([m.origin for m in msgs], np.int64),
+            "step": np.asarray([m.step for m in msgs], np.int64),
+        }
+
+    @staticmethod
+    def _messages_from_arrays(m: dict) -> list[Message]:
+        return [Message(seed=int(s), coef=float(c), origin=int(o), step=int(t))
+                for s, c, o, t in zip(np.asarray(m["seed"]),
+                                      np.asarray(m["coef"]),
+                                      np.asarray(m["origin"]),
+                                      np.asarray(m["step"]))]
+
+    def state_dict(self) -> tuple[dict, dict]:
+        raise NotImplementedError
+
+    def load_state_dict(self, arrays: dict, meta: dict) -> None:
+        raise NotImplementedError
+
 
 class FloodNetwork(_FloodBase):
     """Reference per-message engine for one decentralized run."""
@@ -301,6 +334,39 @@ class FloodNetwork(_FloodBase):
         self.ledger.sync(payload + moved * MESSAGE_BYTES, count=moved)
         report.syncs += 1
         report.transferred += moved
+
+    # -- checkpointing ---------------------------------------------------------
+    def state_dict(self) -> tuple[dict, dict]:
+        union: dict = {}
+        for st in self.states:
+            union.update(st.store)
+        uids = sorted(union)
+        idx = {uid: k for k, uid in enumerate(uids)}
+        arrays: dict = {"msgs": self._messages_arrays([union[u] for u in uids])}
+        for i, st in enumerate(self.states):
+            arrays[f"seen{i}"] = np.asarray(
+                sorted(idx[u] for u in st.seen), np.int64)
+            arrays[f"frontier{i}"] = np.asarray(
+                [idx[m.uid] for m in st.frontier], np.int64)
+            arrays[f"catchup{i}"] = np.asarray(
+                [idx[m.uid] for m in self._catchup[i]], np.int64)
+        return arrays, {"engine": "python", "topo": self.topo.state_dict()}
+
+    def load_state_dict(self, arrays: dict, meta: dict) -> None:
+        self.topo.load_state_dict(meta["topo"])
+        msgs = self._messages_from_arrays(arrays["msgs"])
+        self.states = [ClientFloodState.empty() for _ in range(self.n)]
+        self._catchup = [[] for _ in range(self.n)]
+        for i, st in enumerate(self.states):
+            for k in np.asarray(arrays[f"seen{i}"], np.int64):
+                m = msgs[int(k)]
+                st.seen.add(m.uid)
+                st.store[m.uid] = m
+            st.frontier = [msgs[int(k)]
+                           for k in np.asarray(arrays[f"frontier{i}"], np.int64)]
+            self._catchup[i] = [msgs[int(k)]
+                                for k in np.asarray(arrays[f"catchup{i}"],
+                                                    np.int64)]
 
     # -- introspection ---------------------------------------------------------
     def in_flight(self) -> int:
@@ -494,6 +560,43 @@ class VectorFloodNetwork(_FloodBase):
         self.ledger.sync(payload + moved * MESSAGE_BYTES, count=moved)
         report.syncs += 1
         report.transferred += moved
+
+    # -- checkpointing ---------------------------------------------------------
+    def state_dict(self) -> tuple[dict, dict]:
+        occ = self._occ_bytes()
+        arrays: dict = {
+            "msgs": self._messages_arrays(self._msgs),
+            "seen": self._seen[:, :occ].copy(),
+            "front": self._front[:, :occ].copy(),
+        }
+        for i, f in enumerate(self._catchup):
+            arrays[f"catchup{i}"] = np.asarray(
+                [self._uid2idx[m.uid] for m in f], np.int64)
+        return arrays, {"engine": "numpy", "topo": self.topo.state_dict()}
+
+    def load_state_dict(self, arrays: dict, meta: dict) -> None:
+        self.topo.load_state_dict(meta["topo"])
+        msgs = self._messages_from_arrays(arrays["msgs"])
+        # re-register into fresh tables: the parallel seed/coef/step arrays
+        # and uid2idx rebuild deterministically from the message list, and
+        # capacity regrows geometrically just as it did live
+        self._msgs = []
+        self._uid2idx = {}
+        self._seeds = np.zeros(self._INITIAL_BITS, np.uint32)
+        self._coefs = np.zeros(self._INITIAL_BITS, np.float32)
+        self._steps = np.full(self._INITIAL_BITS, STEP_PAD, np.int32)
+        nbytes = self._INITIAL_BITS // 8
+        self._seen = np.zeros((self.n, nbytes), np.uint8)
+        self._front = np.zeros((self.n, nbytes), np.uint8)
+        for m in msgs:
+            self._register(m)
+        occ = self._occ_bytes()
+        self._seen[:, :occ] = np.asarray(arrays["seen"], np.uint8)
+        self._front[:, :occ] = np.asarray(arrays["front"], np.uint8)
+        self._catchup = [
+            [msgs[int(k)] for k in np.asarray(arrays[f"catchup{i}"], np.int64)]
+            for i in range(self.n)]
+        self._adj_version = -1   # force adjacency rebuild against the topo
 
     # -- introspection ---------------------------------------------------------
     def in_flight(self) -> int:

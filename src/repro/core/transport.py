@@ -1,0 +1,280 @@
+"""Transport plugins: the communication half of the Method × Transport API.
+
+A transport owns (a) the network substrate — flood engine, mixing matrix,
+or nothing — (b) the churn response (anti-entropy drains, live-subgraph
+reweighting), and (c) the :class:`~repro.core.messages.CommLedger`.  Byte
+accounting lives HERE and nowhere else: a method never sees the ledger, so
+the paper's cost metric cannot drift when methods are added or refactored.
+
+Three substrates cover every §4.2 protocol:
+
+* :class:`FloodTransport`   — seed–scalar flooding (``core.flood``) with
+  delayed-flooding ``k``-hop budgets, anti-entropy catch-up after churn,
+  and end-of-run drain.  Inboxes are :class:`FloodInbox` padded matrices.
+* :class:`GossipTransport`  — mixing-matrix parameter exchange every
+  ``every`` steps, optionally through Choco compressed differences.  The
+  inbox is the mixed trainable pytree.
+* :class:`GossipSRTransport`— the §3.2 strawman: full seed–scalar histories
+  across every edge, averaged under the mixing matrix.
+* :class:`NullTransport`    — no communication (the centralized oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import jax
+import numpy as np
+
+from repro.core import flood, gossip, messages
+from repro.core.messages import CommLedger, MESSAGE_BYTES
+from repro.topology import graphs
+from repro.topology.dynamic import DynamicTopology
+
+
+@dataclasses.dataclass
+class FloodInbox:
+    """One step's newly delivered flood payloads: dense padded ``(n, K)``
+    seed/coef/step matrices (see ``flood.pad_payloads``) plus the receiver
+    step ``t`` (only the legacy ``epoch_replay=False`` path reads it)."""
+    seeds: np.ndarray
+    coefs: np.ndarray
+    steps: np.ndarray
+    t: int
+
+
+class TransportBase:
+    """Default hooks so concrete transports only override what they use."""
+
+    ledger: CommLedger
+
+    def bind(self, init_payload: Any) -> None:
+        pass
+
+    def apply_churn(self, events) -> None:
+        raise ValueError(f"{type(self).__name__} does not support churn")
+
+    def drain(self, max_iters: int, final_step: int) -> Iterator[Any]:
+        return iter(())
+
+    def stats(self) -> dict:
+        return {}
+
+    # -- checkpointing --------------------------------------------------------
+
+    def state_arrays(self) -> dict | None:
+        """Array-valued pytree of transport state (None when stateless)."""
+        return None
+
+    def state_meta(self) -> dict:
+        return {"ledger": dataclasses.asdict(self.ledger)}
+
+    def load_state(self, arrays: Any, meta: dict) -> None:
+        for k, v in meta.get("ledger", {}).items():
+            setattr(self.ledger, k, int(v))
+
+
+class FloodTransport(TransportBase):
+    """Seed–scalar flooding over a (churnable) overlay graph.
+
+    Wraps ``flood.make_network``: per-step exchange injects the outbox
+    messages and runs ``k`` flood rounds (``flood_k`` or the live effective
+    diameter), prepending any anti-entropy catch-up payloads produced by
+    churn earlier in the step so they ride in the same padded matrices.
+    """
+
+    def __init__(self, graph, *, backend: str = "auto",
+                 flood_k: int | None = None):
+        self.net = flood.make_network(graph, backend=backend)
+        self.flood_k = flood_k
+        self._pending = None          # anti-entropy catch-up, per-client arrays
+
+    @property
+    def ledger(self) -> CommLedger:
+        return self.net.ledger
+
+    def active_mask(self) -> np.ndarray:
+        return self.net.active_mask()
+
+    def apply_churn(self, events) -> None:
+        self.net.apply_churn(events)
+        self._pending = self.net.drain_catchup_arrays()
+
+    def exchange(self, payload, t: int, active: np.ndarray) -> FloodInbox:
+        for i, msg in payload:
+            self.net.inject(i, msg)
+        # full flooding tracks the *effective* diameter, which churn moves
+        k_hops = self.flood_k if self.flood_k is not None else self.net.diameter
+        sds, cfs, stp = self.net.rounds_padded(k_hops, extra=self._pending)
+        self._pending = None
+        return FloodInbox(sds, cfs, stp, t)
+
+    def drain(self, max_iters: int, final_step: int) -> Iterator[FloodInbox]:
+        """Flush in-flight delayed-flooding messages: flood with no new
+        injections until the network is quiescent, so every sent message is
+        delivered (and, with epoch replay, consensus restored)."""
+        for _ in range(max_iters):
+            if self.net.in_flight() == 0:
+                break
+            sds, cfs, stp = self.net.rounds_padded(self.net.diameter + 1)
+            yield FloodInbox(sds, cfs, stp, final_step)
+
+    def stats(self) -> dict:
+        return {"n_messages": self.ledger.n_messages,
+                "diameter": self.net.diameter,
+                "sync_bytes": self.ledger.sync_bytes,
+                "n_syncs": self.ledger.n_syncs}
+
+    # serializing the network builds the full message-table/seen-set dump;
+    # the Trainer calls state_arrays then state_meta per checkpoint, so the
+    # first call stashes the (arrays, meta) pair for the second.
+
+    def state_arrays(self):
+        arrays, self._ck_meta = self.net.state_dict()
+        return arrays
+
+    def state_meta(self) -> dict:
+        net_meta = getattr(self, "_ck_meta", None)
+        if net_meta is None:
+            net_meta = self.net.state_dict()[1]
+        self._ck_meta = None
+        return {**super().state_meta(), "net": net_meta}
+
+    def load_state(self, arrays, meta) -> None:
+        super().load_state(arrays, meta)
+        self.net.load_state_dict(arrays, meta["net"])
+        self._pending = None
+
+
+class GossipTransport(TransportBase):
+    """Mixing-matrix parameter exchange, optionally Choco-compressed.
+
+    ``exchange`` fires every ``every`` steps (``local_iters``) and returns
+    the mixed trainable pytree; other steps return None.  Under churn the
+    mixing matrix shrinks to the live subgraph (frozen rows become e_i) and
+    only live edges are charged.  With ``choco_density`` set, differences
+    are top-k compressed through per-client surrogate copies whose state
+    lives here (it is communication state, not method state).
+    """
+
+    def __init__(self, graph, W: np.ndarray, *, every: int,
+                 choco_density: float | None = None,
+                 churn_aware: bool = False):
+        self.topo = DynamicTopology(graph)
+        self.W = W
+        self.every = every
+        self.density = choco_density
+        self.churn_aware = churn_aware
+        self.live_edges = graph.number_of_edges()
+        self.ledger = CommLedger(n_edges=graph.number_of_edges())
+        self._choco = None
+
+    def bind(self, init_payload) -> None:
+        if self.density is not None:
+            # paper App. B.2: surrogates start at the pretrained weights
+            self._choco = gossip.choco_init(init_payload)
+
+    def active_mask(self) -> np.ndarray:
+        return self.topo.active_mask()
+
+    def apply_churn(self, events) -> None:
+        # gossip has no anti-entropy — the mixing matrix just shrinks
+        self.topo.apply_events(events)
+        self.W = graphs.metropolis_weights(self.topo.current_graph())
+        self.live_edges = self.topo.live_edge_count()
+
+    def exchange(self, trainable, t: int, active: np.ndarray):
+        if (t + 1) % self.every != 0:
+            return None
+        n = self.topo.n
+        floats_per_client = sum(l.size for l in jax.tree.leaves(trainable)) // n
+        if self.density is not None:
+            # mask offline clients' innovations whenever anyone is actually
+            # offline, churn_aware or not — a directly composed transport
+            # whose flag disagrees with the method still masks correctly
+            # (with every client online the mask is a bitwise no-op)
+            use_active = self.churn_aware or not active.all()
+            trainable, self._choco = gossip.choco_round(
+                trainable, self._choco, self.W, self.density,
+                active=active if use_active else None)
+            self.ledger.send(2 * self.live_edges * messages.topk_payload_bytes(
+                floats_per_client, self.density))
+        else:
+            trainable = gossip.mix(trainable, self.W)
+            self.ledger.send(2 * self.live_edges * floats_per_client * 4)
+        return trainable
+
+    def state_arrays(self):
+        return {"x_hat": self._choco.x_hat} if self._choco is not None else None
+
+    def state_meta(self) -> dict:
+        return {**super().state_meta(),
+                "topo": self.topo.state_dict(),
+                "live_edges": self.live_edges,
+                "W": np.asarray(self.W, np.float64).tolist()}
+
+    def load_state(self, arrays, meta) -> None:
+        super().load_state(arrays, meta)
+        self.topo.load_state_dict(meta["topo"])
+        self.live_edges = int(meta["live_edges"])
+        self.W = np.asarray(meta["W"], np.float64)
+        if self.density is not None:
+            x = (arrays or {}).get("x_hat")
+            if x is None:
+                raise ValueError("choco checkpoint is missing the surrogate "
+                                 "copies (x_hat)")
+            self._choco = gossip.ChocoState(
+                x_hat=jax.tree.map(lambda l: jax.numpy.asarray(l), x))
+
+
+class GossipSRTransport(TransportBase):
+    """Gossip with shared randomness (§3.2 strawman): every ``every`` steps
+    each client ships its FULL coefficient history to every neighbour —
+    O(t·n) bytes per edge — and histories are averaged under the mixing
+    matrix (eq. 8)."""
+
+    def __init__(self, graph, W: np.ndarray, *, every: int):
+        self.W = W
+        self.every = every
+        self.neigh = graphs.neighbors(graph)
+        self.n = graph.number_of_nodes()
+        self.ledger = CommLedger(n_edges=graph.number_of_edges())
+
+    def active_mask(self) -> np.ndarray:
+        return np.ones(self.n, dtype=bool)
+
+    def exchange(self, hist: list[dict], t: int, active: np.ndarray):
+        if (t + 1) % self.every != 0:
+            return None
+        n, W = self.n, self.W
+        all_uids = set()
+        for i in range(n):
+            all_uids |= set(hist[i].keys())
+        for i in range(n):
+            for j in self.neigh[i]:
+                self.ledger.send(len(hist[j]) * MESSAGE_BYTES,
+                                 count=len(hist[j]))
+        new_hist = []
+        for i in range(n):
+            h = {}
+            for uid in all_uids:
+                cbar = sum(W[i, j] * hist[j].get(uid, [0, 0, 0.0])[2]
+                           for j in range(n) if W[i, j] > 0)
+                ref = next(hist[j][uid] for j in range(n) if uid in hist[j])
+                h[uid] = [ref[0], ref[1], cbar]
+            new_hist.append(h)
+        return new_hist
+
+
+class NullTransport(TransportBase):
+    """No communication (the centralized equivalence oracle)."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.ledger = CommLedger()
+
+    def active_mask(self) -> np.ndarray:
+        return np.ones(self.n, dtype=bool)
+
+    def exchange(self, payload, t: int, active: np.ndarray):
+        return None

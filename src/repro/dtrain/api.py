@@ -1,0 +1,261 @@
+"""The Method × Transport plugin API of the decentralized trainer (DESIGN.md §4).
+
+The paper's central claim is an algorithm/transport separation: the same
+SubCGE-ZO local step stays exact whether its seed–scalar messages arrive by
+full flood, delayed flood, or anti-entropy catch-up.  This module makes that
+separation a code contract:
+
+* a :class:`Method` owns the *math* of one training algorithm — how a client
+  turns a batch into new local state and an outbox, and how it folds a
+  transport's inbox back in;
+* a ``Transport`` (see :mod:`repro.core.transport`) owns the *network* — it
+  moves outboxes, applies churn to the topology, and is the only layer that
+  touches a :class:`~repro.core.messages.CommLedger`;
+* the :class:`~repro.dtrain.trainer.Trainer` owns the *loop* — churn
+  scheduling, loss/eval logging, checkpointing, drain, wall-clock, and
+  :class:`RunResult` assembly — once, for every method.
+
+A new training scenario is one new ``Method`` (and, if it speaks a new wire
+format, one new ``Transport``) registered in
+:data:`repro.dtrain.methods.METHOD_SPECS`; the step loop is never forked.
+
+Contract details the protocols cannot express in types:
+
+* ``local_step`` receives the live ``active`` mask and must make offline
+  clients exact no-ops (freeze their parameters, emit nothing for them).
+  :func:`freeze_offline` is the shared helper; SeedFlood instead masks
+  coefficients to zero inside its fused step, which is bitwise equivalent.
+* ``Outbox.payload`` is transport-specific and opaque to the Trainer:
+  flooding methods emit ``(client, Message)`` pairs, gossip methods emit the
+  stacked trainable pytree, gossip-SR emits coefficient histories, and the
+  null transport ignores it.
+* ``apply_inbox`` must accept ``inbox=None`` (the transport had nothing to
+  deliver this step — e.g. gossip between mixing rounds).
+* ``state_tree``/``state_meta``/``load_state`` make method state
+  checkpointable: the tree holds arrays (saved via ``checkpoint/ckpt.py``),
+  the meta holds JSON-serializable scalars.  A resumed run must be
+  bitwise-identical to an uninterrupted one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, uniform_dense
+from repro.core import gossip
+from repro.core.subcge import SubCGEConfig
+from repro.data import synthetic
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.topology import graphs
+
+
+def sim_arch(vocab: int = 256, d_model: int = 64, n_layers: int = 2,
+             n_heads: int = 4, d_ff: int = 128) -> ArchConfig:
+    """Tiny dense decoder for simulator experiments (the paper's OPT stand-in)."""
+    return uniform_dense("sim-tiny", n_layers=n_layers, d_model=d_model,
+                         n_heads=n_heads, n_kv=n_heads, d_ff=d_ff,
+                         vocab=vocab, tie_embeddings=True, max_seq=128)
+
+
+class Setup:
+    """Shared run scaffolding: arch, data splits, topology, stacked params.
+
+    Built once per run from a ``DTrainConfig`` and handed to both the method
+    (``Method.init``) and the transport factory.
+    """
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.arch = cfg.arch or sim_arch()
+        self.task = cfg.task or synthetic.TaskConfig(vocab=self.arch.vocab)
+        self.train, self.valid, self.test = synthetic.make_splits(self.task)
+        self.parts = synthetic.partition(self.train, cfg.n_clients,
+                                         scheme=cfg.partition, seed=cfg.seed)
+        self.graph = graphs.make(cfg.topology, cfg.n_clients)
+        self.W = graphs.metropolis_weights(self.graph)
+        self.spec = tf.arch_spec(self.arch)
+        p0 = plib.init_params(self.spec, cfg.seed)
+        self.stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_clients,) + l.shape), p0)
+        self.meta = plib.subcge_meta(self.spec)
+        self.scfg = SubCGEConfig(rank=cfg.subcge_rank,
+                                 refresh_period=cfg.subcge_tau, eps=cfg.eps)
+        self.n_params = plib.n_params(self.spec)
+
+    def batches(self, step: int):
+        return synthetic.stacked_batches(self.train, self.parts, step,
+                                         self.cfg.batch_size, self.cfg.seed)
+
+    def gmp(self, stacked) -> float:
+        avg = jax.tree.map(lambda l: l.mean(axis=0), stacked)
+        return synthetic.accuracy(self.arch, avg, self.test,
+                                  forward_fn=tf.forward)
+
+    def valid_loss(self, stacked) -> float:
+        avg = jax.tree.map(lambda l: l.mean(axis=0), stacked)
+        toks = jnp.asarray(self.valid.tokens[:128])
+        return float(tf.lm_loss(self.arch, avg, {"tokens": toks}))
+
+
+@dataclasses.dataclass
+class RunResult:
+    method: str
+    gmp: float                      # final averaged-model accuracy
+    loss_curve: list[float]
+    acc_curve: list[tuple[int, float]]
+    bytes_per_edge: float
+    total_bytes: float
+    consensus_error: float
+    wall_s: float
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    #: extra[] entries excluded from to_json(): whole parameter pytrees that
+    #: belong in an .npz checkpoint, not a results file.
+    _JSON_DROP = ("final_stacked", "final_params")
+
+    def to_json(self) -> dict:
+        """JSON-safe dict: numpy/JAX scalars become Python numbers, arrays
+        become lists, and parameter pytrees (``final_stacked``/``final_params``)
+        are dropped — so ``json.dumps`` never trips on a non-serializable
+        dtype regardless of what a method put in ``extra``."""
+        def coerce(x):
+            if isinstance(x, (jax.Array, np.ndarray, np.generic)):
+                arr = np.asarray(x)
+                return arr.item() if arr.ndim == 0 else arr.tolist()
+            if isinstance(x, dict):
+                return {str(k): coerce(v) for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                return [coerce(v) for v in x]
+            if isinstance(x, (bool, int, str)) or x is None:
+                return x
+            if isinstance(x, float):
+                return x
+            return str(x)
+
+        extra = {k: v for k, v in self.extra.items() if k not in self._JSON_DROP}
+        return coerce({
+            "method": self.method, "gmp": self.gmp,
+            "loss_curve": self.loss_curve, "acc_curve": self.acc_curve,
+            "bytes_per_edge": self.bytes_per_edge,
+            "total_bytes": self.total_bytes,
+            "consensus_error": self.consensus_error,
+            "wall_s": self.wall_s, "extra": extra,
+        })
+
+
+@dataclasses.dataclass
+class Outbox:
+    """What one local step hands back to the loop: per-model losses (the
+    Trainer logs them under the active mask) and a transport payload."""
+    losses: np.ndarray
+    payload: Any = None
+
+
+# ---------------------------------------------------------------------------
+# protocols
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Method(Protocol):
+    """One training algorithm.  State is opaque to the Trainer — anything
+    from a bare stacked-params pytree (SeedFlood) to a dataclass bundling
+    histories and velocities."""
+
+    def init(self, setup: Setup) -> Any: ...
+    def local_step(self, state: Any, batch: dict, active: np.ndarray,
+                   t: int) -> tuple[Any, Outbox]: ...
+    def apply_inbox(self, state: Any, inbox: Any) -> Any: ...
+    def params_of(self, state: Any) -> Any: ...
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """One communication substrate.  Owns the CommLedger: every byte a run
+    charges is charged here, never in a Method or the Trainer."""
+
+    def bind(self, init_payload: Any) -> None: ...
+    def active_mask(self) -> np.ndarray: ...
+    def apply_churn(self, events) -> None: ...
+    def exchange(self, payload: Any, t: int, active: np.ndarray) -> Any: ...
+    def stats(self) -> dict: ...
+
+
+class MethodBase:
+    """Default hooks so concrete methods only override what they use."""
+
+    name = "method"
+
+    def initial_payload(self, state: Any) -> Any:
+        """Payload-equivalent view of the *initial* state, handed to
+        ``Transport.bind`` (Choco initializes its surrogate copies from the
+        pre-training weights — paper App. B.2)."""
+        return None
+
+    def label(self, transport_stats: dict) -> str:
+        """RunResult.method display name (may cite transport stats)."""
+        return self.name
+
+    def result_extra(self, state: Any) -> dict:
+        return {}
+
+    def wall_handle(self, state: Any):
+        """Array (tree) the Trainer blocks on for per-step wall timing, or
+        None to skip the device sync."""
+        return None
+
+    # -- checkpointing --------------------------------------------------------
+
+    def state_tree(self, state: Any) -> Any:
+        """Array-valued pytree capturing the method state (ckpt.save)."""
+        raise NotImplementedError(f"{self.name} does not support checkpointing")
+
+    def state_meta(self, state: Any) -> dict:
+        """JSON-serializable non-array state (histories, counters)."""
+        return {}
+
+    def load_state(self, state: Any, tree: Any, meta: dict) -> Any:
+        raise NotImplementedError(f"{self.name} does not support checkpointing")
+
+
+# ---------------------------------------------------------------------------
+# shared step helpers (used by methods and the Trainer)
+# ---------------------------------------------------------------------------
+
+def freeze_offline(new, old, active: np.ndarray):
+    """Keep offline clients' leaves at their pre-step values."""
+    mask = jnp.asarray(active)
+
+    def f(a, b):
+        m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(f, new, old)
+
+
+def log_step_loss(loss_curve: list[float], losses: np.ndarray,
+                  active: np.ndarray) -> None:
+    """Mean loss over online clients; under a full outage nobody computed a
+    step, so carry the previous loss instead of averaging an empty slice
+    (NaN + RuntimeWarning)."""
+    if active.any():
+        loss_curve.append(float(np.mean(losses[active])))
+    else:
+        loss_curve.append(loss_curve[-1] if loss_curve else float("nan"))
+
+
+def active_consensus(stacked, active: np.ndarray) -> float:
+    """Consensus error over online clients only (offline params are frozen
+    snapshots — counting them would conflate churn with divergence).  The
+    mask is clipped to the model axis so single-model methods (central_zo)
+    report 0 without pretending to have per-client copies."""
+    n_models = jax.tree.leaves(stacked)[0].shape[0]
+    idx = np.flatnonzero(active[:n_models])
+    if idx.size <= 1:
+        return 0.0
+    sub = jax.tree.map(lambda l: l[idx], stacked)
+    return float(gossip.consensus_error(sub))

@@ -1,0 +1,105 @@
+"""Method registry: name -> (method factory, transport factory, config rules).
+
+Every §4.2 protocol is one :class:`MethodSpec` composing a Method plugin
+with a Transport plugin — the table DESIGN.md §4 renders.  Adding a
+training scenario means appending one entry here; the Trainer loop, churn
+handling, checkpointing, and RunResult assembly are inherited.
+
+``consumes`` lists the *method-specific* DTrainConfig fields a spec
+actually reads; ``repro.dtrain.runner.validate_config`` rejects non-default
+values of any other method-specific field instead of dropping them on the
+floor (shared fields — steps, lr, topology, … — are always legal).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.transport import (FloodTransport, GossipSRTransport,
+                                  GossipTransport, NullTransport)
+from repro.dtrain.api import Method, Setup, Transport
+from repro.dtrain.methods.central_zo import CentralZOMethod
+from repro.dtrain.methods.gossip import (FirstOrderStep, GossipMethod,
+                                         LoRAAdapter, ZeroOrderStep)
+from repro.dtrain.methods.gossip_sr import GossipSRMethod
+from repro.dtrain.methods.seedflood import SeedFloodMethod
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    name: str
+    make_method: Callable[..., Method]           # (cfg) -> Method
+    make_transport: Callable[..., Transport]     # (cfg, setup) -> Transport
+    consumes: frozenset = frozenset()            # method-specific cfg fields
+    supports_churn: bool = False
+
+
+def _flood_transport(cfg, setup: Setup) -> FloodTransport:
+    return FloodTransport(setup.graph, backend=cfg.flood_backend,
+                          flood_k=cfg.flood_k)
+
+
+def _gossip_transport(density=None):
+    def make(cfg, setup: Setup) -> GossipTransport:
+        return GossipTransport(setup.graph, setup.W, every=cfg.local_iters,
+                               choco_density=density(cfg) if density else None,
+                               churn_aware=cfg.churn is not None)
+    return make
+
+
+def _gossip_sr_transport(cfg, setup: Setup) -> GossipSRTransport:
+    return GossipSRTransport(setup.graph, setup.W, every=cfg.local_iters)
+
+
+def _null_transport(cfg, setup: Setup) -> NullTransport:
+    return NullTransport(cfg.n_clients)
+
+
+def _gossip_spec(name: str, *, zeroth_order: bool, use_lora: bool,
+                 choco: bool) -> MethodSpec:
+    local_cls = ZeroOrderStep if zeroth_order else FirstOrderStep
+
+    def make_method(cfg) -> GossipMethod:
+        adapter = (LoRAAdapter(cfg.lora_r, cfg.lora_alpha) if use_lora
+                   else None)
+        return GossipMethod(cfg, name, local_cls(), adapter)
+
+    consumes = set()
+    if choco:
+        consumes.add("choco_density")
+    if use_lora:
+        consumes |= {"lora_r", "lora_alpha"}
+    return MethodSpec(
+        name=name, make_method=make_method,
+        make_transport=_gossip_transport(
+            (lambda cfg: cfg.choco_density) if choco else None),
+        consumes=frozenset(consumes), supports_churn=True)
+
+
+METHOD_SPECS: dict[str, MethodSpec] = {
+    "seedflood": MethodSpec(
+        name="seedflood", make_method=SeedFloodMethod,
+        make_transport=_flood_transport,
+        consumes=frozenset({"flood_k", "flood_backend", "batched_step",
+                            "epoch_replay", "drain"}),
+        supports_churn=True),
+    "dsgd": _gossip_spec("dsgd", zeroth_order=False, use_lora=False,
+                         choco=False),
+    "dzsgd": _gossip_spec("dzsgd", zeroth_order=True, use_lora=False,
+                          choco=False),
+    "choco": _gossip_spec("choco", zeroth_order=False, use_lora=False,
+                          choco=True),
+    "dsgd_lora": _gossip_spec("dsgd_lora", zeroth_order=False, use_lora=True,
+                              choco=False),
+    "dzsgd_lora": _gossip_spec("dzsgd_lora", zeroth_order=True, use_lora=True,
+                               choco=False),
+    "choco_lora": _gossip_spec("choco_lora", zeroth_order=False,
+                               use_lora=True, choco=True),
+    "gossip_sr": MethodSpec(
+        name="gossip_sr", make_method=GossipSRMethod,
+        make_transport=_gossip_sr_transport),
+    "central_zo": MethodSpec(
+        name="central_zo", make_method=CentralZOMethod,
+        make_transport=_null_transport,
+        consumes=frozenset({"momentum"})),
+}

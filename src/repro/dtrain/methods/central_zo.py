@@ -1,0 +1,105 @@
+"""Centralized SubCGE-ZO oracle as a Method plugin.
+
+n perturbations per step, averaging the n two-point estimates —
+mathematically identical to SeedFlood under full flooding (same seeds, same
+batches), which is what the tier-1 equivalence test pins.  Composes with
+``NullTransport`` (no communication, zero bytes).  Also hosts the
+beyond-paper subspace momentum (velocity in the r×r coefficient space).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seeds as seedlib, subcge
+from repro.dtrain.api import MethodBase, Outbox, Setup
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.models.perturb import nest_subspace, sample_pert
+
+
+@dataclasses.dataclass
+class CentralZOState:
+    params: Any
+    velocity: dict[str, jax.Array]
+
+
+class CentralZOMethod(MethodBase):
+    name = "central_zo"
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, setup: Setup) -> CentralZOState:
+        cfg = self.cfg
+        n = cfg.n_clients
+        arch, meta, scfg = setup.arch, setup.meta, setup.scfg
+
+        @jax.jit
+        def step_fn(params, velocity, batch, seeds_t, step):
+            sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+            sub_n = nest_subspace(sub)
+            def one(toks, sd):
+                pert = sample_pert(meta, scfg, sd, scfg.eps)
+                lp = tf.lm_loss(arch, params, {"tokens": toks}, sub=sub_n,
+                                pert=pert)
+                lm = tf.lm_loss(arch, params, {"tokens": toks}, sub=sub_n,
+                                pert=pert.with_scale(-scfg.eps))
+                return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+            alphas, losses = jax.vmap(one)(batch["tokens"], seeds_t)
+            coefs = -cfg.lr * alphas / n
+            if cfg.momentum > 0.0:
+                # beyond-paper: momentum in the r×r coefficient space (O(r²)
+                # state/leaf, consensus-safe; velocity resets at τ-refresh
+                # since it is only meaningful within its subspace window)
+                is_refresh = jnp.logical_and(step > 0,
+                                             step % scfg.refresh_period == 0)
+                velocity = {p: jnp.where(is_refresh, jnp.zeros_like(v), v)
+                            for p, v in velocity.items()}
+                new, velocity = subcge.momentum_apply(
+                    params, meta, scfg, sub, velocity, seeds_t, coefs,
+                    beta=cfg.momentum)
+            else:
+                new = subcge.apply_messages(params, meta, scfg, sub, seeds_t,
+                                            coefs)
+            return new, velocity, jnp.mean(losses)
+
+        self._step_fn = step_fn
+        params = jax.tree.map(lambda l: l[0], setup.stacked)
+        return CentralZOState(params=params,
+                              velocity=subcge.zero_buffers(meta, scfg))
+
+    def local_step(self, state: CentralZOState, batch, active, t):
+        seeds_t = jnp.asarray(
+            seedlib.client_seeds(self.cfg.seed, t, self.cfg.n_clients))
+        params, velocity, loss = self._step_fn(state.params, state.velocity,
+                                               batch, seeds_t, t)
+        return (CentralZOState(params=params, velocity=velocity),
+                Outbox(losses=np.asarray(loss).reshape(1)))
+
+    def apply_inbox(self, state: CentralZOState, inbox):
+        return state
+
+    def params_of(self, state: CentralZOState):
+        return jax.tree.map(lambda l: l[None], state.params)
+
+    def result_extra(self, state: CentralZOState) -> dict:
+        return {"final_params": state.params}
+
+    # -- checkpointing --------------------------------------------------------
+    # velocity keys are '/'-joined leaf paths; the npz nesting splits them,
+    # so load re-flattens the restored subtree back to path-keyed form.
+
+    def state_tree(self, state: CentralZOState):
+        return {"params": state.params, "velocity": state.velocity}
+
+    def load_state(self, state: CentralZOState, tree, meta) -> CentralZOState:
+        velocity = {p: jnp.asarray(v)
+                    for p, v in plib.flatten_paths(tree["velocity"]).items()}
+        return CentralZOState(
+            params=jax.tree.map(jnp.asarray, tree["params"]),
+            velocity=velocity)

@@ -1,0 +1,161 @@
+"""Gossip-averaging baselines as ONE Method composed from strategy parts.
+
+The monolith's ``zeroth_order``/``use_lora``/``choco`` flag triple becomes
+composition:
+
+* a *local-update strategy* — :class:`FirstOrderStep` (autodiff SGD) or
+  :class:`ZeroOrderStep` (MeZO-style two-point estimate);
+* an optional :class:`LoRAAdapter` that narrows the trainable pytree to
+  adapters merged into frozen base weights at evaluation time;
+* compression is NOT a method concern: Choco lives entirely in
+  ``GossipTransport`` (it compresses what crosses the wire, not how a
+  client steps).
+
+So ``dsgd`` = FO, ``dzsgd`` = ZO, ``dsgd_lora`` = FO+LoRA, … — six
+registry entries over two strategy classes and one adapter, instead of six
+hand-rolled loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seeds as seedlib, zo
+from repro.dtrain import lora as loralib
+from repro.dtrain.api import MethodBase, Outbox, Setup, freeze_offline
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class GossipState:
+    base: Any          # stacked pretrained weights (frozen under LoRA)
+    trainable: Any     # stacked trainable pytree (full params or adapters)
+
+
+class LoRAAdapter:
+    """Narrows training+gossip to rank-r q/v adapters (paper §4.2 LoRA rows)."""
+
+    def __init__(self, r: int, alpha: float):
+        self.r = r
+        self.alpha = alpha
+
+    def init_trainable(self, setup: Setup):
+        lspec = loralib.lora_spec(setup.spec, r=self.r)
+        l0 = loralib.lora_init(lspec, setup.cfg.seed + 1)
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (setup.cfg.n_clients,) + l.shape), l0)
+
+    def full_params(self, base_i, lora_i):
+        return loralib.merge(base_i, lora_i, self.alpha)
+
+
+class ZeroOrderStep:
+    """MeZO-style two-point local step (DZSGD): one shared-seed Gaussian
+    direction per client per step."""
+
+    needs_seeds = True
+
+    def build(self, cfg, arch, adapter: LoRAAdapter | None):
+        @jax.jit
+        def local_steps(base, trainable, batch, seeds_t):
+            def one(b_i, tr_i, toks, sd):
+                if adapter is not None:
+                    loss_fn = lambda l: tf.lm_loss(
+                        arch, adapter.full_params(b_i, l), {"tokens": toks})
+                else:
+                    loss_fn = lambda p: tf.lm_loss(arch, p, {"tokens": toks})
+                z = zo.mezo_z(tr_i, sd)
+                lp = loss_fn(zo.tree_add_scaled(tr_i, z, cfg.eps))
+                lm = loss_fn(zo.tree_add_scaled(tr_i, z, -cfg.eps))
+                a = (lp - lm) / (2 * cfg.eps)
+                return zo.tree_add_scaled(tr_i, z, -cfg.lr * a), 0.5 * (lp + lm)
+            return jax.vmap(one)(base, trainable, batch["tokens"], seeds_t)
+        return local_steps
+
+
+class FirstOrderStep:
+    """Plain autodiff SGD local step (DSGD / Choco)."""
+
+    needs_seeds = False
+
+    def build(self, cfg, arch, adapter: LoRAAdapter | None):
+        @jax.jit
+        def local_steps(base, trainable, batch):
+            def one(b_i, tr_i, toks):
+                if adapter is not None:
+                    loss_fn = lambda l: tf.lm_loss(
+                        arch, adapter.full_params(b_i, l), {"tokens": toks})
+                else:
+                    loss_fn = lambda p: tf.lm_loss(arch, p, {"tokens": toks})
+                loss, g = jax.value_and_grad(loss_fn)(tr_i)
+                new = jax.tree.map(lambda p, gg: p - cfg.lr * gg.astype(p.dtype),
+                                   tr_i, g)
+                return new, loss
+            return jax.vmap(one, in_axes=(0, 0, 0))(base, trainable,
+                                                    batch["tokens"])
+        return local_steps
+
+
+class GossipMethod(MethodBase):
+    def __init__(self, cfg, name: str, local, adapter: LoRAAdapter | None = None):
+        self.cfg = cfg
+        self.name = name
+        self.local = local
+        self.adapter = adapter
+        self.churn_aware = cfg.churn is not None
+
+    def init(self, setup: Setup) -> GossipState:
+        trainable = (self.adapter.init_trainable(setup)
+                     if self.adapter is not None else setup.stacked)
+        self._local_steps = self.local.build(self.cfg, setup.arch, self.adapter)
+        return GossipState(base=setup.stacked, trainable=trainable)
+
+    def initial_payload(self, state: GossipState):
+        return state.trainable
+
+    def local_step(self, state: GossipState, batch, active, t):
+        cfg = self.cfg
+        if self.local.needs_seeds:
+            seeds_t = jnp.asarray(
+                seedlib.client_seeds(cfg.seed, t, cfg.n_clients))
+            new_trainable, stat = self._local_steps(state.base, state.trainable,
+                                                    batch, seeds_t)
+        else:
+            new_trainable, stat = self._local_steps(state.base, state.trainable,
+                                                    batch)
+        # churn: offline clients freeze (no local step); without churn the
+        # mask is statically all-ones and the guard keeps the hot path clean.
+        # The mask check also covers a directly composed run whose
+        # churn_aware flag was left False (freeze with all-online is a
+        # bitwise no-op, so parity with the monolith is unaffected).
+        if self.churn_aware or not active.all():
+            new_trainable = freeze_offline(new_trainable, state.trainable,
+                                           active)
+        state = dataclasses.replace(state, trainable=new_trainable)
+        return state, Outbox(losses=np.asarray(stat), payload=new_trainable)
+
+    def apply_inbox(self, state: GossipState, inbox):
+        if inbox is None:
+            return state
+        return dataclasses.replace(state, trainable=inbox)
+
+    def params_of(self, state: GossipState):
+        if self.adapter is not None:
+            return jax.vmap(self.adapter.full_params)(state.base,
+                                                      state.trainable)
+        return state.trainable
+
+    # -- checkpointing --------------------------------------------------------
+    # base is the deterministic broadcast of the seed-0 init — recomputed by
+    # init() at resume, so only the trainable pytree is checkpointed.
+
+    def state_tree(self, state: GossipState):
+        return {"trainable": state.trainable}
+
+    def load_state(self, state: GossipState, tree, meta) -> GossipState:
+        return dataclasses.replace(
+            state, trainable=jax.tree.map(jnp.asarray, tree["trainable"]))

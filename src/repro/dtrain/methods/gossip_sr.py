@@ -1,0 +1,148 @@
+"""Gossip with shared randomness (§3.2 strawman) as a Method plugin.
+
+Each client keeps a per-uid coefficient ledger; the transport averages full
+histories under the mixing matrix (O(t·n) comm), and ``apply_inbox``
+re-applies the coefficient *deltas* message-by-message — the O(t·n·d)
+compute blow-up the paper contrasts against SeedFlood, measured by the
+``reconstructions`` counter.  Delta replay is epoch-correct: a reweighted
+coefficient for message (i, t0) re-applies under the subspace of ITS origin
+step t0, since history reweighting routinely reaches across τ boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flood, seeds as seedlib, subcge
+from repro.dtrain.api import MethodBase, Outbox, Setup
+from repro.models import transformer as tf
+from repro.models.perturb import epoch_subspace, sample_pert
+
+
+@dataclasses.dataclass
+class GossipSRState:
+    stacked: Any
+    hist: list[dict]        # per-client: uid -> [seed, alpha_scaled, coef_i]
+    applied: list[dict]     # per-client: uid -> coef already folded into θ_i
+    reconstructions: int = 0
+
+
+class GossipSRMethod(MethodBase):
+    name = "gossip_sr"
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, setup: Setup) -> GossipSRState:
+        cfg = self.cfg
+        self.n = cfg.n_clients
+        arch, meta, scfg = setup.arch, setup.meta, setup.scfg
+        self.scfg = scfg
+
+        @jax.jit
+        def estimate_all(stacked_p, batch, seeds_t, step):
+            sub = epoch_subspace(meta, scfg, cfg.seed, step)
+            def one(p, toks, sd):
+                pert = sample_pert(meta, scfg, sd, scfg.eps)
+                lp = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub, pert=pert)
+                lm = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub,
+                                pert=pert.with_scale(-scfg.eps))
+                return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+            return jax.vmap(one)(stacked_p, batch["tokens"], seeds_t)
+
+        @jax.jit
+        def apply_deltas_fn(p, ss, cc, stp, epochs):
+            return subcge.apply_messages_epoch(p, meta, scfg, cfg.seed,
+                                               ss, cc, stp, epochs)
+
+        self._estimate_all = estimate_all
+        self._apply_deltas_fn = apply_deltas_fn
+        return GossipSRState(stacked=setup.stacked,
+                             hist=[dict() for _ in range(self.n)],
+                             applied=[dict() for _ in range(self.n)])
+
+    def _apply_deltas(self, p_i, sds, cfs, sts):
+        K = flood.pad_pow2(len(sds))
+        pad_s = np.zeros(K, np.uint32); pad_s[:len(sds)] = sds
+        pad_c = np.zeros(K, np.float32); pad_c[:len(cfs)] = cfs
+        pad_t = np.full(K, flood.STEP_PAD, np.int32); pad_t[:len(sts)] = sts
+        epochs = jnp.asarray(subcge.epoch_slots(pad_t, self.scfg))
+        return self._apply_deltas_fn(p_i, jnp.asarray(pad_s),
+                                     jnp.asarray(pad_c), jnp.asarray(pad_t),
+                                     epochs)
+
+    def local_step(self, state: GossipSRState, batch, active, t):
+        cfg, n = self.cfg, self.n
+        seeds_np = seedlib.client_seeds(cfg.seed, t, n)
+        seeds_t = jnp.asarray(seeds_np)
+        alphas, losses = self._estimate_all(state.stacked, batch, seeds_t, t)
+        alphas = np.asarray(alphas)
+        for i in range(n):
+            uid = (i, t)
+            state.hist[i][uid] = [int(seeds_np[i]), float(-cfg.lr * alphas[i]),
+                                  1.0]
+        return state, Outbox(losses=np.asarray(losses), payload=state.hist)
+
+    def apply_inbox(self, state: GossipSRState, inbox):
+        if inbox is not None:
+            state = dataclasses.replace(state, hist=inbox)
+        # incremental re-application of coefficient deltas: O(t·n·d) — the
+        # §3.2 cost blow-up, measured
+        n = self.n
+        reconstructions = state.reconstructions
+        new_stacked = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda l: l[i], state.stacked)
+            sds, cfs, sts = [], [], []
+            for uid, (sd, a_scaled, c) in state.hist[i].items():
+                prev = state.applied[i].get(uid, 0.0)
+                delta = c * a_scaled - prev
+                if abs(delta) > 0:
+                    sds.append(sd); cfs.append(delta); sts.append(uid[1])
+                    state.applied[i][uid] = c * a_scaled
+            if sds:
+                reconstructions += len(sds)
+                p_i = self._apply_deltas(p_i, np.asarray(sds, np.uint32),
+                                         np.asarray(cfs, np.float32),
+                                         np.asarray(sts, np.int32))
+            new_stacked.append(p_i)
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+        return dataclasses.replace(state, stacked=stacked,
+                                   reconstructions=reconstructions)
+
+    def params_of(self, state: GossipSRState):
+        return state.stacked
+
+    def result_extra(self, state: GossipSRState) -> dict:
+        return {"reconstructions": state.reconstructions}
+
+    # -- checkpointing --------------------------------------------------------
+    # uid keys are (origin, step) tuples; JSON flattens each ledger to an
+    # insertion-ordered [origin, step, seed, alpha_scaled, coef] list so the
+    # restored dicts iterate (and therefore re-apply deltas) in the same
+    # order — float-sum order is part of bitwise reproducibility.
+
+    def state_tree(self, state: GossipSRState):
+        return {"stacked": state.stacked}
+
+    def state_meta(self, state: GossipSRState) -> dict:
+        return {
+            "hist": [[[o, t, sd, a, c] for (o, t), (sd, a, c) in h.items()]
+                     for h in state.hist],
+            "applied": [[[o, t, c] for (o, t), c in a.items()]
+                        for a in state.applied],
+            "reconstructions": state.reconstructions,
+        }
+
+    def load_state(self, state: GossipSRState, tree, meta) -> GossipSRState:
+        return GossipSRState(
+            stacked=jax.tree.map(jnp.asarray, tree["stacked"]),
+            hist=[{(int(o), int(t)): [int(sd), float(a), float(c)]
+                   for o, t, sd, a, c in h} for h in meta["hist"]],
+            applied=[{(int(o), int(t)): float(c) for o, t, c in a}
+                     for a in meta["applied"]],
+            reconstructions=int(meta["reconstructions"]))

@@ -1,0 +1,186 @@
+"""SeedFlood (Algorithm 1) as a Method plugin.
+
+The math of blocks (A)+(B)+(C): per step, one fused donated-buffer jit
+dispatch computes every client's ZO estimate, the -η·α/n_eff coefficients,
+and each online client's own local update over the stacked client axis
+(offline clients get coefficient 0 — an exact no-op, which is this method's
+offline-freeze); the outbox is the per-client seed–scalar messages, and
+``apply_inbox`` replays the transport's padded ``(n, K)`` payload matrices
+epoch-correctly (vmap of ``apply_messages_epoch``).  The per-client
+reference path (``batched_step=False``) and the pinned legacy
+receiver-epoch replay (``epoch_replay=False``) survive for parity and
+regression tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flood, seeds as seedlib, subcge
+from repro.core.messages import Message
+from repro.core.transport import FloodInbox
+from repro.dtrain.api import MethodBase, Outbox, Setup
+from repro.models import transformer as tf
+from repro.models.perturb import epoch_subspace, nest_subspace, sample_pert
+
+
+class SeedFloodMethod(MethodBase):
+    name = "seedflood"
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- jitted pieces --------------------------------------------------------
+
+    def init(self, setup: Setup):
+        cfg = self.cfg
+        self.n = cfg.n_clients
+        meta, scfg, arch = setup.meta, setup.scfg, setup.arch
+        self.meta, self.scfg = meta, scfg
+
+        def local_estimate(params_i, batch_i, seed_i, sub):
+            pert = sample_pert(meta, scfg, seed_i, scfg.eps)
+            lp = tf.lm_loss(arch, params_i, batch_i, sub=sub, pert=pert)
+            lm = tf.lm_loss(arch, params_i, batch_i, sub=sub,
+                            pert=pert.with_scale(-scfg.eps))
+            return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+
+        # (A)+(B) fused, batched path: one dispatch over the stacked client
+        # axis computes every ZO estimate, the -η·α/n_eff coefficients, and
+        # each online client's own local update (offline clients get coef 0,
+        # an exact no-op).  Buffers are donated — params update in place.
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def estimate_and_update(stacked, tokens, seeds_t, step, active_f):
+            sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+            sub_n = nest_subspace(sub)
+            alphas, losses = jax.vmap(
+                lambda p, b, sd: local_estimate(p, {"tokens": b}, sd, sub_n)
+            )(stacked, tokens, seeds_t)
+            n_eff = jnp.maximum(jnp.sum(active_f), 1.0)
+            coefs = -cfg.lr * alphas / n_eff
+            own = jnp.where(active_f > 0, coefs, 0.0)
+            new = jax.vmap(lambda p, sd, c: subcge.apply_messages(
+                p, meta, scfg, sub, sd[None], c[None]))(stacked, seeds_t, own)
+            return new, losses, coefs
+
+        # estimate only — the per-client reference path updates in a host loop
+        @jax.jit
+        def estimate_all(stacked, tokens, seeds_t, step):
+            sub_n = epoch_subspace(meta, scfg, cfg.seed, step)
+            return jax.vmap(
+                lambda p, b, sd: local_estimate(p, {"tokens": b}, sd, sub_n)
+            )(stacked, tokens, seeds_t)
+
+        @jax.jit
+        def update_one(p, sds, cfs, step):
+            sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+            return subcge.apply_messages(p, meta, scfg, sub, sds, cfs)
+
+        # (C) replay: every received message under ITS SENDER's subspace
+        # epoch — the reconstruction guarantee survives τ-refresh boundaries
+        # (delayed flooding, anti-entropy catch-up).  Batched variant is one
+        # dispatch over the (n, K) padded payload matrices; jax's shape cache
+        # bounds retraces because K and E are pow2-bucketed.
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def replay_batched(stacked, sds, cfs, stp, epochs):
+            return jax.vmap(
+                lambda p, sd, cf, st: subcge.apply_messages_epoch(
+                    p, meta, scfg, cfg.seed, sd, cf, st, epochs)
+            )(stacked, sds, cfs, stp)
+
+        @jax.jit
+        def replay_one(p, sds, cfs, stp, epochs):
+            return subcge.apply_messages_epoch(p, meta, scfg, cfg.seed,
+                                               sds, cfs, stp, epochs)
+
+        self._estimate_and_update = estimate_and_update
+        self._estimate_all = estimate_all
+        self._update_one = update_one
+        self._replay_batched = replay_batched
+        self._replay_one = replay_one
+        return setup.stacked
+
+    # -- Method protocol ------------------------------------------------------
+
+    def local_step(self, stacked, batch, active, t):
+        cfg, n = self.cfg, self.n
+        seeds_np = seedlib.client_seeds(cfg.seed, t, n)   # hoisted: no retrace
+        seeds_t = jnp.asarray(seeds_np)
+
+        if cfg.batched_step:
+            stacked, losses, coefs_j = self._estimate_and_update(
+                stacked, batch["tokens"], seeds_t, t,
+                jnp.asarray(active, jnp.float32))
+            coefs = np.asarray(coefs_j)
+        else:
+            alphas, losses = self._estimate_all(stacked, batch["tokens"],
+                                                seeds_t, t)
+            n_eff = max(int(active.sum()), 1)   # == n on a static topology
+            # float32 like the fused path (numpy would silently promote)
+            coefs = (-cfg.lr * np.asarray(alphas) / n_eff).astype(np.float32)
+            # (B) local update: each online client applies its own message
+            # immediately; offline clients freeze (no step, no message)
+            new_stacked = []
+            for i in range(n):
+                p_i = jax.tree.map(lambda l: l[i], stacked)
+                if active[i]:
+                    p_i = self._update_one(p_i, seeds_t[i:i + 1],
+                                           jnp.asarray(coefs[i:i + 1]), t)
+                new_stacked.append(p_i)
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+        # (C) online clients inject their fresh messages into the flood
+        outbox = [(i, Message(seed=int(seeds_np[i]), coef=float(coefs[i]),
+                              origin=i, step=t))
+                  for i in range(n) if active[i]]
+        return stacked, Outbox(losses=np.asarray(losses), payload=outbox)
+
+    def apply_inbox(self, stacked, inbox: FloodInbox | None):
+        if inbox is None:
+            return stacked
+        sds, cfs, stp, t = inbox.seeds, inbox.coefs, inbox.steps, inbox.t
+        if sds.shape[1] == 0:
+            return stacked
+        if not self.cfg.epoch_replay:
+            # legacy receiver-step replay (regression demonstration only):
+            # pin every live message to the receiver's current epoch
+            stp = np.where(cfs != 0.0, np.int32(t), np.int32(flood.STEP_PAD))
+        epochs = jnp.asarray(subcge.epoch_slots(stp, self.scfg))
+        if self.cfg.batched_step:
+            return self._replay_batched(stacked, jnp.asarray(sds),
+                                        jnp.asarray(cfs), jnp.asarray(stp),
+                                        epochs)
+        new_stacked = []
+        for i in range(self.n):
+            p_i = jax.tree.map(lambda l: l[i], stacked)
+            if (cfs[i] != 0.0).any():
+                p_i = self._replay_one(p_i, jnp.asarray(sds[i]),
+                                       jnp.asarray(cfs[i]),
+                                       jnp.asarray(stp[i]), epochs)
+            new_stacked.append(p_i)
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+    def params_of(self, stacked):
+        return stacked
+
+    def label(self, transport_stats: dict) -> str:
+        k = (self.cfg.flood_k if self.cfg.flood_k is not None
+             else transport_stats.get("diameter"))
+        return f"seedflood(k={k})"
+
+    def result_extra(self, stacked) -> dict:
+        return {"final_stacked": stacked}
+
+    def wall_handle(self, stacked):
+        return stacked
+
+    # -- checkpointing --------------------------------------------------------
+
+    def state_tree(self, stacked):
+        return {"stacked": stacked}
+
+    def load_state(self, stacked, tree, meta):
+        return jax.tree.map(jnp.asarray, tree["stacked"])

@@ -1,0 +1,155 @@
+"""The ONE training loop every method runs through (DESIGN.md §4).
+
+The Trainer owns everything the four pre-plugin monoliths each
+re-implemented: churn-schedule application, the offline active mask,
+loss/eval/consensus logging, checkpoint/resume, end-of-run drain,
+per-step wall-clock, and ``RunResult`` assembly.  Methods supply the math
+(``local_step``/``apply_inbox``), transports move the bytes; the loop is
+
+    churn events -> local step (+offline freeze) -> log loss
+    -> transport exchange -> apply inbox -> eval/ckpt cadence
+
+Checkpointing (``checkpoint_every``/``resume_from``) snapshots method
+state, transport state (flood frontiers and message tables included — the
+ledger and in-flight delayed-flooding messages are part of run state), and
+the logged curves, via ``repro.checkpoint.ckpt``.  A resumed run is
+bitwise-identical to an uninterrupted one: every source of randomness is
+counter-based in (seed, step), so restoring state and the step counter
+restores the trajectory (``tests/test_trainer_api.py`` pins this, τ-epoch
+crossings included).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.dtrain.api import (Method, RunResult, Setup, Transport,
+                              active_consensus, log_step_loss)
+from repro.topology.dynamic import ChurnSchedule
+
+
+class Trainer:
+    """Drives one decentralized run of ``method`` over ``transport``."""
+
+    def __init__(self, cfg, setup: Setup, method: Method,
+                 transport: Transport, churn: ChurnSchedule | None = None):
+        self.cfg = cfg
+        self.setup = setup
+        self.method = method
+        self.transport = transport
+        self.churn = churn
+
+    # -- checkpoint plumbing ---------------------------------------------------
+
+    def _ckpt_path(self, step: int) -> str:
+        return os.path.join(self.cfg.checkpoint_dir, f"step{step:06d}.npz")
+
+    def _save_checkpoint(self, step: int, state, curves) -> None:
+        loss_curve, acc_curve, consensus_curve, step_wall_s = curves
+        tree = {"method": self.method.state_tree(state)}
+        tarrs = self.transport.state_arrays()
+        if tarrs is not None:
+            tree["transport"] = tarrs
+        ckpt.save(self._ckpt_path(step), tree, metadata={
+            "step": step,
+            "method": self.cfg.method,
+            "loss_curve": loss_curve,
+            "acc_curve": acc_curve,
+            "consensus_curve": consensus_curve,
+            "step_wall_s": step_wall_s,
+            "method_meta": self.method.state_meta(state),
+            "transport_meta": self.transport.state_meta(),
+        })
+
+    def _resume(self, state, curves):
+        # to_jax=False: transport state includes exact int64/float64 arrays
+        # (message coefficients, bitsets) that a float32 cast would corrupt;
+        # methods re-cast their own params subtrees.
+        tree, meta = ckpt.load(self.cfg.resume_from, to_jax=False)
+        if meta.get("method") != self.cfg.method:
+            raise ValueError(
+                f"checkpoint was written by method '{meta.get('method')}', "
+                f"cannot resume a '{self.cfg.method}' run from it")
+        state = self.method.load_state(state, tree["method"],
+                                       meta.get("method_meta") or {})
+        self.transport.load_state(tree.get("transport"),
+                                  meta.get("transport_meta") or {})
+        loss_curve, acc_curve, consensus_curve, step_wall_s = curves
+        loss_curve += [float(x) for x in meta["loss_curve"]]
+        acc_curve += [(int(s), float(a)) for s, a in meta["acc_curve"]]
+        consensus_curve += [(int(s), float(c))
+                            for s, c in meta["consensus_curve"]]
+        step_wall_s += [float(x) for x in meta["step_wall_s"]]
+        return state, int(meta["step"])
+
+    # -- the loop --------------------------------------------------------------
+
+    def run(self) -> RunResult:
+        cfg, s, method, transport = self.cfg, self.setup, self.method, \
+            self.transport
+        state = method.init(s)
+        transport.bind(method.initial_payload(state))
+
+        loss_curve: list[float] = []
+        acc_curve: list[tuple[int, float]] = []
+        consensus_curve: list[tuple[int, float]] = []
+        step_wall_s: list[float] = []   # [0] includes compile (bench_step)
+        curves = (loss_curve, acc_curve, consensus_curve, step_wall_s)
+        start = 0
+        if cfg.resume_from:
+            state, start = self._resume(state, curves)
+        t0 = time.time()
+
+        for t in range(start, cfg.steps):
+            t_step = time.perf_counter()
+            # churn events land at the start of the step; rejoined clients'
+            # anti-entropy catch-up rides in this step's exchange
+            if self.churn is not None and self.churn.events_at(t):
+                transport.apply_churn(self.churn.events_at(t))
+            active = transport.active_mask()
+
+            batch = s.batches(t)
+            state, outbox = method.local_step(state, batch, active, t)
+            log_step_loss(loss_curve, np.asarray(outbox.losses),
+                          active[:len(outbox.losses)])
+
+            inbox = transport.exchange(outbox.payload, t, active)
+            state = method.apply_inbox(state, inbox)
+
+            handle = method.wall_handle(state)
+            if handle is not None:
+                jax.block_until_ready(handle)
+            step_wall_s.append(time.perf_counter() - t_step)
+
+            if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
+                stacked = method.params_of(state)
+                acc_curve.append((t + 1, s.gmp(stacked)))
+                consensus_curve.append((t + 1,
+                                        active_consensus(stacked, active)))
+            if cfg.checkpoint_every and (t + 1) % cfg.checkpoint_every == 0:
+                self._save_checkpoint(t + 1, state, curves)
+
+        if cfg.drain:
+            # flush in-flight delayed-flooding messages: flood + replay with
+            # no new injections until quiescent, so every message is applied
+            for inbox in transport.drain(cfg.steps + 1, cfg.steps):
+                state = method.apply_inbox(state, inbox)
+
+        active = transport.active_mask()
+        stacked = method.params_of(state)
+        stats = transport.stats()
+        extra = {"n_params": s.n_params, **stats,
+                 "consensus_curve": consensus_curve,
+                 "step_wall_s": step_wall_s,
+                 **method.result_extra(state)}
+        return RunResult(
+            method=method.label(stats), gmp=s.gmp(stacked),
+            loss_curve=loss_curve, acc_curve=acc_curve,
+            bytes_per_edge=transport.ledger.per_edge,
+            total_bytes=transport.ledger.total_bytes,
+            consensus_error=active_consensus(stacked, active),
+            wall_s=time.time() - t0, extra=extra)

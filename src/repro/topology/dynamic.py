@@ -352,6 +352,25 @@ class DynamicTopology:
         self._mutated()
         return restored
 
+    # -- checkpointing ---------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable membership state (the base graph is rebuilt
+        from config at resume, so only the mutable overlay is captured)."""
+        return {
+            "online": [bool(x) for x in self._online],
+            "down": sorted(sorted(e) for e in self._down),
+            "partition_cut": sorted(sorted(e) for e in self._partition_cut),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self._online = [bool(x) for x in state["online"]]
+        self._down = {frozenset((int(u), int(v)))
+                      for u, v in state["down"]}
+        self._partition_cut = {frozenset((int(u), int(v)))
+                               for u, v in state["partition_cut"]}
+        self._mutated()
+
     # -- event application ----------------------------------------------------
 
     def apply_event(self, ev: ChurnEvent) -> TopologyDelta:

@@ -1,0 +1,610 @@
+"""FROZEN pre-refactor monolith runner — the golden reference for the
+Method x Transport plugin API (tests/test_golden_parity.py).
+
+This is the verbatim training-loop code of the monolithic
+``repro.dtrain.runner`` as of the commit that introduced the plugin API
+(PR "Decompose the monolithic runner"), minus the config dataclasses (those
+are imported from the live runner so configs stay interchangeable).  The
+parity suite runs each method through BOTH implementations and asserts
+bitwise-identical loss curves, byte ledgers and final parameters -- if you
+change method math in the plugins, you must consciously retire or update
+this file.
+
+Not a test module; imported by test_golden_parity.py only.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ChurnConfig
+from repro.core import flood, gossip, messages, seeds as seedlib, subcge, zo
+from repro.core.messages import Message, MESSAGE_BYTES
+from repro.data import synthetic
+from repro.dtrain import lora as loralib
+from repro.dtrain.runner import DTrainConfig, RunResult, sim_arch
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.models.perturb import (Pert, epoch_subspace, nest_subspace,
+                                  sample_pert)
+from repro.topology import graphs
+from repro.topology.dynamic import ChurnSchedule, DynamicTopology
+from repro.core.subcge import SubCGEConfig
+
+
+# ---------------------------------------------------------------------------
+# shared scaffolding
+# ---------------------------------------------------------------------------
+
+class _Setup:
+    def __init__(self, cfg: DTrainConfig):
+        self.cfg = cfg
+        self.arch = cfg.arch or sim_arch()
+        self.task = cfg.task or synthetic.TaskConfig(vocab=self.arch.vocab)
+        self.train, self.valid, self.test = synthetic.make_splits(self.task)
+        self.parts = synthetic.partition(self.train, cfg.n_clients,
+                                         scheme=cfg.partition, seed=cfg.seed)
+        self.graph = graphs.make(cfg.topology, cfg.n_clients)
+        self.W = graphs.metropolis_weights(self.graph)
+        self.spec = tf.arch_spec(self.arch)
+        p0 = plib.init_params(self.spec, cfg.seed)
+        self.stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_clients,) + l.shape), p0)
+        self.meta = plib.subcge_meta(self.spec)
+        self.scfg = SubCGEConfig(rank=cfg.subcge_rank,
+                                 refresh_period=cfg.subcge_tau, eps=cfg.eps)
+        self.n_params = plib.n_params(self.spec)
+
+    def batches(self, step: int):
+        return synthetic.stacked_batches(self.train, self.parts, step,
+                                         self.cfg.batch_size, self.cfg.seed)
+
+    def gmp(self, stacked) -> float:
+        avg = jax.tree.map(lambda l: l.mean(axis=0), stacked)
+        return synthetic.accuracy(self.arch, avg, self.test,
+                                  forward_fn=tf.forward)
+
+    def valid_loss(self, stacked) -> float:
+        avg = jax.tree.map(lambda l: l.mean(axis=0), stacked)
+        toks = jnp.asarray(self.valid.tokens[:128])
+        return float(tf.lm_loss(self.arch, avg, {"tokens": toks}))
+
+
+def _churn_schedule(cfg: DTrainConfig) -> ChurnSchedule | None:
+    if cfg.churn is None:
+        return None
+    if isinstance(cfg.churn, ChurnSchedule):
+        return cfg.churn
+    if isinstance(cfg.churn, ChurnConfig):
+        return ChurnSchedule.from_config(cfg.churn)
+    raise TypeError(f"churn must be a ChurnSchedule or ChurnConfig, "
+                    f"got {type(cfg.churn).__name__}")
+
+
+def _require_static(cfg: DTrainConfig, method: str) -> None:
+    if cfg.churn is not None:
+        raise ValueError(f"method '{method}' does not support churn")
+
+
+def _active_consensus(stacked, active: np.ndarray) -> float:
+    """Consensus error over online clients only (offline params are frozen
+    snapshots — counting them would conflate churn with divergence)."""
+    idx = np.flatnonzero(active)
+    if idx.size <= 1:
+        return 0.0
+    sub = jax.tree.map(lambda l: l[idx], stacked)
+    return float(gossip.consensus_error(sub))
+
+
+def _freeze_offline(new, old, active: np.ndarray):
+    """Keep offline clients' leaves at their pre-step values."""
+    mask = jnp.asarray(active)
+
+    def f(a, b):
+        m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(f, new, old)
+
+
+def _log_loss(loss_curve: list[float], losses: np.ndarray,
+              active: np.ndarray) -> None:
+    """Mean loss over online clients; under a full outage nobody computed a
+    step, so carry the previous loss instead of averaging an empty slice
+    (NaN + RuntimeWarning)."""
+    if active.any():
+        loss_curve.append(float(np.mean(losses[active])))
+    else:
+        loss_curve.append(loss_curve[-1] if loss_curve else float("nan"))
+
+
+# ---------------------------------------------------------------------------
+# SeedFlood (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def run_seedflood(cfg: DTrainConfig) -> RunResult:
+    s = _Setup(cfg)
+    n = cfg.n_clients
+    churn = _churn_schedule(cfg)
+    net = flood.make_network(s.graph, backend=cfg.flood_backend)
+    meta, scfg, arch = s.meta, s.scfg, s.arch
+
+    # ---- jitted pieces ----------------------------------------------------
+    def local_estimate(params_i, batch_i, seed_i, sub):
+        pert = sample_pert(meta, scfg, seed_i, scfg.eps)
+        lp = tf.lm_loss(arch, params_i, batch_i, sub=sub, pert=pert)
+        lm = tf.lm_loss(arch, params_i, batch_i, sub=sub,
+                        pert=pert.with_scale(-scfg.eps))
+        return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+
+    # (A)+(B) fused, batched path: one dispatch over the stacked client axis
+    # computes every ZO estimate, the -η·α/n_eff coefficients, and each
+    # online client's own local update (offline clients get coef 0, an exact
+    # no-op).  Buffers are donated — params update in place.
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def estimate_and_update(stacked, tokens, seeds_t, step, active_f):
+        sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+        sub_n = nest_subspace(sub)
+        alphas, losses = jax.vmap(
+            lambda p, b, sd: local_estimate(p, {"tokens": b}, sd, sub_n)
+        )(stacked, tokens, seeds_t)
+        n_eff = jnp.maximum(jnp.sum(active_f), 1.0)
+        coefs = -cfg.lr * alphas / n_eff
+        own = jnp.where(active_f > 0, coefs, 0.0)
+        new = jax.vmap(lambda p, sd, c: subcge.apply_messages(
+            p, meta, scfg, sub, sd[None], c[None]))(stacked, seeds_t, own)
+        return new, losses, coefs
+
+    # estimate only — the per-client reference path updates in a host loop
+    @jax.jit
+    def estimate_all(stacked, tokens, seeds_t, step):
+        sub_n = epoch_subspace(meta, scfg, cfg.seed, step)
+        return jax.vmap(
+            lambda p, b, sd: local_estimate(p, {"tokens": b}, sd, sub_n)
+        )(stacked, tokens, seeds_t)
+
+    @jax.jit
+    def update_one(p, sds, cfs, step):
+        sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+        return subcge.apply_messages(p, meta, scfg, sub, sds, cfs)
+
+    # (C) replay: every received message under ITS SENDER's subspace epoch —
+    # the reconstruction guarantee survives τ-refresh boundaries (delayed
+    # flooding, anti-entropy catch-up).  Batched variant is one dispatch
+    # over the (n, K) padded payload matrices; jax's shape cache bounds
+    # retraces because K and E are pow2-bucketed.
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def replay_batched(stacked, sds, cfs, stp, epochs):
+        return jax.vmap(
+            lambda p, sd, cf, st: subcge.apply_messages_epoch(
+                p, meta, scfg, cfg.seed, sd, cf, st, epochs)
+        )(stacked, sds, cfs, stp)
+
+    @jax.jit
+    def replay_one(p, sds, cfs, stp, epochs):
+        return subcge.apply_messages_epoch(p, meta, scfg, cfg.seed,
+                                           sds, cfs, stp, epochs)
+
+    def replay_payloads(stacked, sds, cfs, stp, t):
+        """Apply one (n, K) padded payload batch to all clients."""
+        if sds.shape[1] == 0:
+            return stacked
+        if not cfg.epoch_replay:
+            # legacy receiver-step replay (regression demonstration only):
+            # pin every live message to the receiver's current epoch
+            stp = np.where(cfs != 0.0, np.int32(t), np.int32(flood.STEP_PAD))
+        epochs = jnp.asarray(subcge.epoch_slots(stp, scfg))
+        if cfg.batched_step:
+            return replay_batched(stacked, jnp.asarray(sds), jnp.asarray(cfs),
+                                  jnp.asarray(stp), epochs)
+        new_stacked = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda l: l[i], stacked)
+            if (cfs[i] != 0.0).any():
+                p_i = replay_one(p_i, jnp.asarray(sds[i]), jnp.asarray(cfs[i]),
+                                 jnp.asarray(stp[i]), epochs)
+            new_stacked.append(p_i)
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+    # ---- training loop ------------------------------------------------------
+    stacked = s.stacked
+    active = net.active_mask()
+    loss_curve, acc_curve, consensus_curve = [], [], []
+    step_wall_s = []     # per-step seconds ([0] includes compile; bench_step)
+    t0 = time.time()
+    for t in range(cfg.steps):
+        t_step = time.perf_counter()
+        # churn events land at the start of the step; rejoined clients carry
+        # their anti-entropy catch-up messages into this step's apply phase
+        pending = None
+        if churn is not None and churn.events_at(t):
+            net.apply_churn(churn.events_at(t))
+            active = net.active_mask()
+            pending = net.drain_catchup_arrays()
+        # full flooding tracks the *effective* diameter, which churn moves
+        k_hops = cfg.flood_k if cfg.flood_k is not None else net.diameter
+
+        batch = s.batches(t)
+        seeds_np = seedlib.client_seeds(cfg.seed, t, n)   # hoisted: no retrace
+        seeds_t = jnp.asarray(seeds_np)
+
+        if cfg.batched_step:
+            stacked, losses, coefs_j = estimate_and_update(
+                stacked, batch["tokens"], seeds_t, t,
+                jnp.asarray(active, jnp.float32))
+            coefs = np.asarray(coefs_j)
+        else:
+            alphas, losses = estimate_all(stacked, batch["tokens"], seeds_t, t)
+            n_eff = max(int(active.sum()), 1)   # == n on a static topology
+            # float32 like the fused path (numpy would silently promote)
+            coefs = (-cfg.lr * np.asarray(alphas) / n_eff).astype(np.float32)
+            # (B) local update: each online client applies its own message
+            # immediately; offline clients freeze (no step, no message)
+            new_stacked = []
+            for i in range(n):
+                p_i = jax.tree.map(lambda l: l[i], stacked)
+                if active[i]:
+                    p_i = update_one(p_i, seeds_t[i:i + 1],
+                                     jnp.asarray(coefs[i:i + 1]), t)
+                new_stacked.append(p_i)
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+        _log_loss(loss_curve, np.asarray(losses), active)
+
+        # (C) online clients inject their fresh messages into the flood
+        for i in range(n):
+            if active[i]:
+                net.inject(i, Message(seed=int(seeds_np[i]),
+                                      coef=float(coefs[i]), origin=i, step=t))
+
+        # flooding: k hops per local iteration (frontiers persist — delayed
+        # flooding semantics when k < diameter); anti-entropy catch-up rides
+        # in front of fresh floods in the same padded matrices
+        sds, cfs, stp = net.rounds_padded(k_hops, extra=pending)
+        stacked = replay_payloads(stacked, sds, cfs, stp, t)
+        jax.block_until_ready(stacked)
+        step_wall_s.append(time.perf_counter() - t_step)
+
+        if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
+            acc_curve.append((t + 1, s.gmp(stacked)))
+            consensus_curve.append((t + 1, _active_consensus(stacked, active)))
+
+    if cfg.drain:
+        # flush in-flight delayed-flooding messages: flood + replay with no
+        # new injections until quiescent, so every sent message is applied
+        for _ in range(cfg.steps + 1):
+            if net.in_flight() == 0:
+                break
+            sds, cfs, stp = net.rounds_padded(net.diameter + 1)
+            stacked = replay_payloads(stacked, sds, cfs, stp, cfg.steps)
+
+    gmp = s.gmp(stacked)
+    k_label = cfg.flood_k if cfg.flood_k is not None else net.diameter
+    return RunResult(
+        method=f"seedflood(k={k_label})", gmp=gmp, loss_curve=loss_curve,
+        acc_curve=acc_curve, bytes_per_edge=net.ledger.per_edge,
+        total_bytes=net.ledger.total_bytes,
+        consensus_error=_active_consensus(stacked, active),
+        wall_s=time.time() - t0,
+        extra={"n_messages": net.ledger.n_messages, "diameter": net.diameter,
+               "n_params": s.n_params, "consensus_curve": consensus_curve,
+               "sync_bytes": net.ledger.sync_bytes,
+               "n_syncs": net.ledger.n_syncs,
+               "step_wall_s": step_wall_s,
+               "final_stacked": stacked})
+
+
+# ---------------------------------------------------------------------------
+# gossip baselines
+# ---------------------------------------------------------------------------
+
+def _gossip_common(cfg: DTrainConfig, *, zeroth_order: bool, use_lora: bool,
+                   choco: bool) -> RunResult:
+    s = _Setup(cfg)
+    n = cfg.n_clients
+    arch, meta = s.arch, s.meta
+    ledger = messages.CommLedger(n_edges=s.graph.number_of_edges())
+    n_edges = s.graph.number_of_edges()
+
+    # churn: gossip has no anti-entropy — offline clients freeze and the
+    # mixing matrix shrinks to the live subgraph (frozen rows become e_i)
+    churn = _churn_schedule(cfg)
+    topo = DynamicTopology(s.graph) if churn is not None else None
+    active = np.ones(n, dtype=bool)
+    W = s.W
+    live_edges = n_edges
+
+    lspec = None
+    lora_stacked = None
+    if use_lora:
+        lspec = loralib.lora_spec(s.spec, r=cfg.lora_r)
+        l0 = loralib.lora_init(lspec, cfg.seed + 1)
+        lora_stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape), l0)
+        payload = loralib.n_lora_params(lspec) * 4
+    else:
+        payload = s.n_params * 4
+
+    def full_params(base_i, lora_i):
+        if use_lora:
+            return loralib.merge(base_i, lora_i, cfg.lora_alpha)
+        return base_i
+
+    # ---- local step ---------------------------------------------------------
+    if zeroth_order:
+        @jax.jit
+        def local_steps(base, trainable, batch, seeds_t):
+            def one(b_i, tr_i, toks, sd):
+                if use_lora:
+                    loss_fn = lambda l: tf.lm_loss(arch, full_params(b_i, l),
+                                                   {"tokens": toks})
+                else:
+                    loss_fn = lambda p: tf.lm_loss(arch, p, {"tokens": toks})
+                z = zo.mezo_z(tr_i, sd)
+                lp = loss_fn(zo.tree_add_scaled(tr_i, z, cfg.eps))
+                lm = loss_fn(zo.tree_add_scaled(tr_i, z, -cfg.eps))
+                a = (lp - lm) / (2 * cfg.eps)
+                return zo.tree_add_scaled(tr_i, z, -cfg.lr * a), 0.5 * (lp + lm)
+            return jax.vmap(one)(base, trainable, batch["tokens"], seeds_t)
+    else:
+        @jax.jit
+        def local_steps(base, trainable, batch):
+            def one(b_i, tr_i, toks):
+                if use_lora:
+                    loss_fn = lambda l: tf.lm_loss(arch, full_params(b_i, l),
+                                                   {"tokens": toks})
+                else:
+                    loss_fn = lambda p: tf.lm_loss(arch, p, {"tokens": toks})
+                loss, g = jax.value_and_grad(loss_fn)(tr_i)
+                new = jax.tree.map(lambda p, gg: p - cfg.lr * gg.astype(p.dtype),
+                                   tr_i, g)
+                return new, loss
+            return jax.vmap(one, in_axes=(0, 0, 0))(base, trainable, batch["tokens"])
+
+    trainable = lora_stacked if use_lora else s.stacked
+    base = s.stacked
+    choco_state = gossip.choco_init(trainable) if choco else None
+
+    loss_curve, acc_curve, consensus_curve = [], [], []
+    t0 = time.time()
+    for t in range(cfg.steps):
+        if topo is not None and churn.events_at(t):
+            topo.apply_events(churn.events_at(t))
+            active = topo.active_mask()
+            W = graphs.metropolis_weights(topo.current_graph())
+            live_edges = topo.live_edge_count()
+
+        batch = s.batches(t)
+        if zeroth_order:
+            seeds_t = jnp.asarray(seedlib.client_seeds(cfg.seed, t, n))
+            new_trainable, stat = local_steps(base, trainable, batch, seeds_t)
+        else:
+            new_trainable, stat = local_steps(base, trainable, batch)
+        trainable = (_freeze_offline(new_trainable, trainable, active)
+                     if topo is not None else new_trainable)
+        _log_loss(loss_curve, np.asarray(stat), active)
+
+        if (t + 1) % cfg.local_iters == 0:
+            if choco:
+                trainable, choco_state = gossip.choco_round(
+                    trainable, choco_state, W, cfg.choco_density,
+                    active=active if topo is not None else None)
+                ledger.send(2 * live_edges * messages.topk_payload_bytes(
+                    payload // 4, cfg.choco_density))
+            else:
+                trainable = gossip.mix(trainable, W)
+                ledger.send(2 * live_edges * payload)
+        if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
+            merged = jax.vmap(full_params)(base, trainable) if use_lora else trainable
+            acc_curve.append((t + 1, s.gmp(merged)))
+            consensus_curve.append((t + 1, _active_consensus(merged, active)))
+
+    merged = jax.vmap(full_params)(base, trainable) if use_lora else trainable
+    name = ("choco" if choco else ("dzsgd" if zeroth_order else "dsgd"))
+    if use_lora:
+        name += "_lora"
+    return RunResult(
+        method=name, gmp=s.gmp(merged), loss_curve=loss_curve,
+        acc_curve=acc_curve, bytes_per_edge=ledger.per_edge,
+        total_bytes=ledger.total_bytes,
+        consensus_error=_active_consensus(merged, active),
+        wall_s=time.time() - t0,
+        extra={"n_params": s.n_params, "consensus_curve": consensus_curve})
+
+
+def run_dsgd(cfg):   return _gossip_common(cfg, zeroth_order=False, use_lora=False, choco=False)
+def run_dzsgd(cfg):  return _gossip_common(cfg, zeroth_order=True, use_lora=False, choco=False)
+def run_choco(cfg):  return _gossip_common(cfg, zeroth_order=False, use_lora=False, choco=True)
+def run_dsgd_lora(cfg):  return _gossip_common(cfg, zeroth_order=False, use_lora=True, choco=False)
+def run_dzsgd_lora(cfg): return _gossip_common(cfg, zeroth_order=True, use_lora=True, choco=False)
+def run_choco_lora(cfg): return _gossip_common(cfg, zeroth_order=False, use_lora=True, choco=True)
+
+
+# ---------------------------------------------------------------------------
+# gossip with shared randomness (§3.2 strawman — O(tn) comm, O(tnd) compute)
+# ---------------------------------------------------------------------------
+
+def run_gossip_sr(cfg: DTrainConfig) -> RunResult:
+    _require_static(cfg, "gossip_sr")
+    s = _Setup(cfg)
+    n = cfg.n_clients
+    arch, meta, scfg = s.arch, s.meta, s.scfg
+    ledger = messages.CommLedger(n_edges=s.graph.number_of_edges())
+    neigh = graphs.neighbors(s.graph)
+    W = s.W
+
+    # per-client coefficient ledgers: uid -> [seed, alpha_scaled, coef_i]
+    hist: list[dict] = [dict() for _ in range(n)]
+    stacked = s.stacked
+    applied: list[dict] = [dict() for _ in range(n)]  # uid -> coef already in θ_i
+
+    @jax.jit
+    def estimate_all(stacked_p, batch, seeds_t, step):
+        sub = epoch_subspace(meta, scfg, cfg.seed, step)
+        def one(p, toks, sd):
+            pert = sample_pert(meta, scfg, sd, scfg.eps)
+            lp = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub, pert=pert)
+            lm = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub,
+                            pert=pert.with_scale(-scfg.eps))
+            return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+        return jax.vmap(one)(stacked_p, batch["tokens"], seeds_t)
+
+    @jax.jit
+    def apply_deltas_fn(p, ss, cc, stp, epochs):
+        return subcge.apply_messages_epoch(p, meta, scfg, cfg.seed,
+                                           ss, cc, stp, epochs)
+
+    def apply_deltas(p_i, sds, cfs, sts):
+        """Epoch-correct delta replay: a reweighted coefficient for message
+        (i, t0) must re-apply under the subspace of ITS origin step t0 —
+        history reweighting routinely reaches across τ boundaries."""
+        K = flood.pad_pow2(len(sds))
+        pad_s = np.zeros(K, np.uint32); pad_s[:len(sds)] = sds
+        pad_c = np.zeros(K, np.float32); pad_c[:len(cfs)] = cfs
+        pad_t = np.full(K, flood.STEP_PAD, np.int32); pad_t[:len(sts)] = sts
+        epochs = jnp.asarray(subcge.epoch_slots(pad_t, scfg))
+        return apply_deltas_fn(p_i, jnp.asarray(pad_s), jnp.asarray(pad_c),
+                               jnp.asarray(pad_t), epochs)
+
+    loss_curve = []
+    reconstructions = 0
+    t0 = time.time()
+    for t in range(cfg.steps):
+        batch = s.batches(t)
+        seeds_np = seedlib.client_seeds(cfg.seed, t, n)
+        seeds_t = jnp.asarray(seeds_np)
+        alphas, losses = estimate_all(stacked, batch, seeds_t, t)
+        alphas = np.asarray(alphas)
+        loss_curve.append(float(np.mean(np.asarray(losses))))
+        for i in range(n):
+            uid = (i, t)
+            hist[i][uid] = [int(seeds_np[i]), float(-cfg.lr * alphas[i]), 1.0]
+
+        if (t + 1) % cfg.local_iters == 0:
+            # exchange full histories; average coefficients (eq. 8)
+            all_uids = set()
+            for i in range(n):
+                all_uids |= set(hist[i].keys())
+            for i in range(n):
+                for j in neigh[i]:
+                    ledger.send(len(hist[j]) * MESSAGE_BYTES, count=len(hist[j]))
+            new_hist = []
+            for i in range(n):
+                h = {}
+                for uid in all_uids:
+                    cbar = sum(W[i, j] * hist[j].get(uid, [0, 0, 0.0])[2]
+                               for j in range(n) if W[i, j] > 0)
+                    ref = next(hist[j][uid] for j in range(n) if uid in hist[j])
+                    h[uid] = [ref[0], ref[1], cbar]
+                new_hist.append(h)
+            hist = new_hist
+
+        # incremental re-application of coefficient deltas: O(t·n·d) — the
+        # §3.2 cost blow-up, measured
+        new_stacked = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda l: l[i], stacked)
+            sds, cfs, sts = [], [], []
+            for uid, (sd, a_scaled, c) in hist[i].items():
+                prev = applied[i].get(uid, 0.0)
+                delta = c * a_scaled - prev
+                if abs(delta) > 0:
+                    sds.append(sd); cfs.append(delta); sts.append(uid[1])
+                    applied[i][uid] = c * a_scaled
+            if sds:
+                reconstructions += len(sds)
+                p_i = apply_deltas(p_i, np.asarray(sds, np.uint32),
+                                   np.asarray(cfs, np.float32),
+                                   np.asarray(sts, np.int32))
+            new_stacked.append(p_i)
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_stacked)
+
+    return RunResult(
+        method="gossip_sr", gmp=s.gmp(stacked), loss_curve=loss_curve,
+        acc_curve=[], bytes_per_edge=ledger.per_edge,
+        total_bytes=ledger.total_bytes,
+        consensus_error=float(gossip.consensus_error(stacked)),
+        wall_s=time.time() - t0,
+        extra={"reconstructions": reconstructions, "n_params": s.n_params})
+
+
+# ---------------------------------------------------------------------------
+# centralized ZO oracle (equivalence target for tests)
+# ---------------------------------------------------------------------------
+
+def run_central_zo(cfg: DTrainConfig) -> RunResult:
+    """Centralized SubCGE-ZO with n perturbations per step, averaging the n
+    two-point estimates — mathematically identical to SeedFlood under full
+    flooding (same seeds, same batches)."""
+    _require_static(cfg, "central_zo")
+    s = _Setup(cfg)
+    n = cfg.n_clients
+    arch, meta, scfg = s.arch, s.meta, s.scfg
+
+    @jax.jit
+    def step_fn(params, velocity, batch, seeds_t, step):
+        sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
+        sub_n = nest_subspace(sub)
+        def one(toks, sd):
+            pert = sample_pert(meta, scfg, sd, scfg.eps)
+            lp = tf.lm_loss(arch, params, {"tokens": toks}, sub=sub_n, pert=pert)
+            lm = tf.lm_loss(arch, params, {"tokens": toks}, sub=sub_n,
+                            pert=pert.with_scale(-scfg.eps))
+            return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
+        alphas, losses = jax.vmap(one)(batch["tokens"], seeds_t)
+        coefs = -cfg.lr * alphas / n
+        if cfg.momentum > 0.0:
+            # beyond-paper: momentum in the r×r coefficient space (O(r²)
+            # state/leaf, consensus-safe; velocity resets at τ-refresh
+            # since it is only meaningful within its subspace window)
+            is_refresh = jnp.logical_and(step > 0,
+                                         step % scfg.refresh_period == 0)
+            velocity = {p: jnp.where(is_refresh, jnp.zeros_like(v), v)
+                        for p, v in velocity.items()}
+            new, velocity = subcge.momentum_apply(
+                params, meta, scfg, sub, velocity, seeds_t, coefs,
+                beta=cfg.momentum)
+        else:
+            new = subcge.apply_messages(params, meta, scfg, sub, seeds_t, coefs)
+        return new, velocity, jnp.mean(losses)
+
+    params = jax.tree.map(lambda l: l[0], s.stacked)
+    velocity = subcge.zero_buffers(meta, scfg)
+    loss_curve = []
+    t0 = time.time()
+    for t in range(cfg.steps):
+        batch = s.batches(t)
+        seeds_t = jnp.asarray(seedlib.client_seeds(cfg.seed, t, n))
+        params, velocity, loss = step_fn(params, velocity, batch, seeds_t, t)
+        loss_curve.append(float(loss))
+
+    stacked = jax.tree.map(lambda l: l[None], params)
+    return RunResult(
+        method="central_zo", gmp=s.gmp(stacked), loss_curve=loss_curve,
+        acc_curve=[], bytes_per_edge=0.0, total_bytes=0.0,
+        consensus_error=0.0, wall_s=time.time() - t0,
+        extra={"n_params": s.n_params, "final_params": params})
+
+
+METHODS: dict[str, Callable[[DTrainConfig], RunResult]] = {
+    "seedflood": run_seedflood,
+    "dsgd": run_dsgd,
+    "dzsgd": run_dzsgd,
+    "choco": run_choco,
+    "dsgd_lora": run_dsgd_lora,
+    "dzsgd_lora": run_dzsgd_lora,
+    "choco_lora": run_choco_lora,
+    "gossip_sr": run_gossip_sr,
+    "central_zo": run_central_zo,
+}
+
+
+def run(cfg: DTrainConfig) -> RunResult:
+    if cfg.method not in METHODS:
+        raise KeyError(f"unknown method '{cfg.method}' (have {sorted(METHODS)})")
+    return METHODS[cfg.method](cfg)

@@ -1,0 +1,198 @@
+"""Method × Transport plugin API: registry smoke, per-method config
+validation, checkpoint/resume bitwise fidelity, RunResult.to_json."""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.dtrain.methods import METHOD_SPECS
+from repro.dtrain.runner import (DTrainConfig, METHODS, run, sim_arch,
+                                 validate_config)
+from repro.topology.dynamic import ChurnSchedule
+
+
+def _cfg(**kw):
+    base = dict(n_clients=4, topology="ring", steps=3, lr=1e-2, batch_size=4,
+                subcge_rank=8, local_iters=2,
+                arch=sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64))
+    base.update(kw)
+    return DTrainConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(METHODS))
+def test_registry_entry_runs_three_steps(name):
+    """Every METHODS entry is a runnable callable: 3 steps, finite losses,
+    a labelled RunResult."""
+    r = METHODS[name](_cfg(method=name))
+    assert len(r.loss_curve) == 3
+    assert np.isfinite(r.loss_curve).all()
+    assert r.method
+    assert np.isfinite(r.gmp)
+
+
+def test_registry_and_specs_agree():
+    assert set(METHODS) == set(METHOD_SPECS)
+
+
+# ---------------------------------------------------------------------------
+# per-method config validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("field,value,bad_method,good_method", [
+    ("momentum", 0.9, "dsgd", "central_zo"),
+    ("choco_density", 0.1, "seedflood", "choco"),
+    ("flood_k", 2, "dzsgd", "seedflood"),
+    ("flood_backend", "numpy", "gossip_sr", "seedflood"),
+    ("batched_step", False, "central_zo", "seedflood"),
+    ("epoch_replay", False, "dsgd_lora", "seedflood"),
+    ("drain", True, "choco_lora", "seedflood"),
+    ("lora_r", 4, "dsgd", "dsgd_lora"),
+    ("lora_alpha", 8.0, "dzsgd", "choco_lora"),
+])
+def test_silently_ignored_fields_are_rejected(field, value, bad_method,
+                                              good_method):
+    with pytest.raises(ValueError, match=field):
+        validate_config(_cfg(method=bad_method, **{field: value}))
+    validate_config(_cfg(method=good_method, **{field: value}))
+
+
+def test_rejection_reaches_run():
+    with pytest.raises(ValueError, match="momentum"):
+        run(_cfg(method="dsgd", momentum=0.9))
+
+
+def test_default_values_pass_everywhere():
+    for name in METHODS:
+        validate_config(_cfg(method=name))
+
+
+def test_checkpoint_fields_must_come_paired():
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        validate_config(_cfg(method="seedflood", checkpoint_every=2))
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        validate_config(_cfg(method="seedflood", checkpoint_dir="ckpts"))
+
+
+def test_eval_cadence_is_uniform_across_methods():
+    """Deliberate difference from the monolith (whose run_central_zo /
+    run_gossip_sr ignored eval_every and always returned acc_curve=[]): the
+    unified Trainer honors the eval cadence for EVERY method."""
+    r = run(_cfg(method="central_zo", steps=2, eval_every=1))
+    assert [t for t, _ in r.acc_curve] == [1, 2]
+    assert r.consensus_error == 0.0     # single model: consensus is trivial
+
+
+# ---------------------------------------------------------------------------
+# RunResult.to_json
+# ---------------------------------------------------------------------------
+
+def test_to_json_is_serializable_and_drops_param_trees():
+    r = run(_cfg(method="seedflood", steps=2, eval_every=1))
+    d = r.to_json()
+    s = json.dumps(d)                       # must not raise
+    assert "final_stacked" not in d["extra"]
+    assert isinstance(d["gmp"], float)
+    assert isinstance(d["total_bytes"], (int, float))
+    back = json.loads(s)
+    assert back["loss_curve"] == r.loss_curve
+
+
+def test_to_json_coerces_hostile_extras():
+    from repro.dtrain.api import RunResult
+    import jax.numpy as jnp
+    r = RunResult(method="x", gmp=np.float32(0.5), loss_curve=[np.float64(1.0)],
+                  acc_curve=[(np.int64(1), np.float32(0.25))],
+                  bytes_per_edge=np.float32(8.0), total_bytes=np.int64(64),
+                  consensus_error=jnp.float32(0.0), wall_s=1.0,
+                  extra={"arr": jnp.arange(3), "np": np.arange(2),
+                         "scalar": np.float32(2.0), "final_params": {"w": 1},
+                         "nested": {"curve": [(1, np.float32(0.5))]}})
+    d = r.to_json()
+    json.dumps(d)                            # must not raise
+    assert d["extra"]["arr"] == [0, 1, 2]
+    assert d["extra"]["scalar"] == 2.0
+    assert "final_params" not in d["extra"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume (bitwise)
+# ---------------------------------------------------------------------------
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_resume_bitwise(tmp_path, tag, **kw):
+    """Run 6 steps straight vs 3 + resume(3); everything but wall-clock must
+    coincide bitwise."""
+    ckdir = os.path.join(tmp_path, tag)
+    full = run(_cfg(steps=6, **kw))
+    half = run(_cfg(steps=6, checkpoint_every=3, checkpoint_dir=ckdir, **kw))
+    path = os.path.join(ckdir, "step000003.npz")
+    assert os.path.exists(path)
+    resumed = run(_cfg(steps=6, resume_from=path, **kw))
+    for r in (half, resumed):
+        assert r.loss_curve == full.loss_curve
+        assert r.total_bytes == full.total_bytes
+        assert r.consensus_error == full.consensus_error
+        assert r.gmp == full.gmp
+        assert r.acc_curve == full.acc_curve
+    for key in ("final_stacked", "final_params"):
+        if key in full.extra:
+            _leaves_equal(full.extra[key], resumed.extra[key])
+    return full, resumed
+
+
+def test_seedflood_resume_bitwise_across_tau_epoch(tmp_path):
+    """THE satellite: delayed flooding (k=1 < D) keeps messages in flight
+    across the checkpoint, and τ=2 puts the resume mid-subspace-window —
+    the resumed run must still bitwise-match the uninterrupted one
+    (frontiers, seen-sets, ledger and epoch state all restored)."""
+    _assert_resume_bitwise(tmp_path, "sf", method="seedflood", n_clients=6,
+                           flood_k=1, subcge_tau=2, drain=True)
+
+
+def test_seedflood_resume_bitwise_with_churn_and_vector_backend(tmp_path):
+    """Checkpoint lands while a client is OFFLINE (leave at 2, rejoin at 4 >
+    checkpoint step 3): the restored topology overlay + bitset engine state
+    must replay the rejoin + anti-entropy identically."""
+    churn = ChurnSchedule.leave_rejoin([2], leave_at=2, rejoin_at=4)
+    _assert_resume_bitwise(tmp_path, "sfc", method="seedflood", n_clients=6,
+                           churn=churn, flood_backend="numpy", subcge_tau=3)
+
+
+def test_gossip_and_choco_resume_bitwise(tmp_path):
+    _assert_resume_bitwise(tmp_path, "dz", method="dzsgd", eval_every=3)
+    # choco: the surrogate copies x̂ are transport state and must survive
+    _assert_resume_bitwise(tmp_path, "ch", method="choco")
+
+
+def test_central_zo_momentum_resume_bitwise(tmp_path):
+    """Velocity buffers (r×r per leaf) are method state; τ=4 puts a refresh
+    (velocity reset) after the resume point."""
+    _assert_resume_bitwise(tmp_path, "cz", method="central_zo", momentum=0.9,
+                           subcge_tau=4)
+
+
+def test_gossip_sr_resume_bitwise(tmp_path):
+    """Coefficient histories and applied-ledgers round-trip through JSON in
+    insertion order (delta re-application order is part of the math)."""
+    _assert_resume_bitwise(tmp_path, "sr", method="gossip_sr")
+
+
+def test_resume_rejects_method_mismatch(tmp_path):
+    ckdir = os.path.join(tmp_path, "mm")
+    run(_cfg(method="seedflood", checkpoint_every=3, checkpoint_dir=ckdir))
+    path = os.path.join(ckdir, "step000003.npz")
+    with pytest.raises(ValueError, match="seedflood"):
+        run(_cfg(method="central_zo", resume_from=path))
