@@ -1,0 +1,129 @@
+"""Kernel-layer microbench (ISSUE 5): emits ``BENCH_kernels.json``.
+
+Two trajectories CI tracks alongside ``BENCH_step.json``:
+
+* ``replay_fused_vs_unfused`` — the jnp-path win the paper's Appendix A
+  describes: replaying K seed messages as K materialized rank-1 axpys
+  (MeZO-style, O(K·n·m)) vs one scatter into the r×r coefficient matrix
+  followed by a single U A V^T fold (O(K + r·(n+m)·min(n,m))).  Both jitted
+  on CPU; median wall time over post-compile reps.
+
+* ``interpret_kernels`` — wall time of the real Pallas kernel bodies through
+  the interpreter vs the jnp oracle on the same shapes.  This is a
+  correctness-exercise cost trajectory (what CI pays to run the lowerings),
+  NOT a perf claim: the interpreter is not the TPU.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--out BENCH_kernels.json]
+"""
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import subcge
+from repro.kernels import ops, ref
+
+
+def _median_ms(fn, reps: int = 7) -> float:
+    jax.block_until_ready(fn())  # compile + drain the async warm-up
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times) * 1e3
+
+
+def bench_replay(n: int, m: int, r: int, K: int) -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(n + K), 5)
+    W = jax.random.normal(ks[0], (n, m))
+    U = jax.random.normal(ks[1], (n, r))
+    V = jax.random.normal(ks[2], (m, r))
+    i = jax.random.randint(ks[3], (K,), 0, r)
+    j = jax.random.randint(ks[4], (K,), 0, r)
+    coefs = jnp.linspace(-1e-3, 1e-3, K)
+    # everything is a runtime argument — closed-over constants would let XLA
+    # constant-fold the replay at compile time and time nothing
+
+    @jax.jit
+    def unfused(W, U, V, i, j, coefs):
+        # MeZO-style replay: K sequential rank-1 axpys, K passes over W
+        def body(acc, kij):
+            c, ik, jk = kij
+            return acc + c * jnp.outer(U[:, ik], V[:, jk]), None
+        out, _ = jax.lax.scan(body, W, (coefs, i, j))
+        return out
+
+    @jax.jit
+    def fused(W, U, V, i, j, coefs):
+        # paper eq. 10: scatter into A (O(K)), then one U A V^T fold
+        A = subcge.scatter_A(i, j, coefs, r)
+        return ref.subcge_apply(W, U, A, V)
+
+    ms_u = _median_ms(lambda: unfused(W, U, V, i, j, coefs))
+    ms_f = _median_ms(lambda: fused(W, U, V, i, j, coefs))
+    return {"bench": "replay_fused_vs_unfused", "n": n, "m": m, "r": r,
+            "K": K, "ms_unfused": round(ms_u, 4), "ms_fused": round(ms_f, 4),
+            "speedup": round(ms_u / ms_f, 2)}
+
+
+def bench_interpret(op: str) -> dict:
+    # both sides jitted with runtime operands (a zero-arg jit closure would
+    # be constant-folded; an eager jnp side would time Python dispatch)
+    ks = jax.random.split(jax.random.PRNGKey(17), 5)
+    if op == "subcge_apply":
+        W = jax.random.normal(ks[0], (512, 512))
+        U = jax.random.normal(ks[1], (512, 16))
+        V = jax.random.normal(ks[2], (512, 16))
+        A = jax.random.normal(ks[3], (16, 16))
+        jit_jnp = jax.jit(lambda *a: ops.subcge_apply(*a, backend="jnp"))
+        jnp_fn = lambda: jit_jnp(W, U, A, V)
+        int_fn = lambda: ops.subcge_apply(W, U, A, V, backend="interpret")
+    elif op == "rank1_matmul":
+        x = jax.random.normal(ks[0], (256, 512))
+        W = jax.random.normal(ks[1], (512, 512))
+        u = jax.random.normal(ks[2], (512,))
+        v = jax.random.normal(ks[3], (512,))
+        jit_jnp = jax.jit(lambda *a: ops.rank1_matmul(*a, backend="jnp"))
+        jnp_fn = lambda: jit_jnp(x, W, u, v, 1e-3)
+        int_fn = lambda: ops.rank1_matmul(x, W, u, v, 1e-3,
+                                          backend="interpret")
+    else:
+        raise ValueError(op)
+    return {"bench": "interpret_kernels", "op": op,
+            "ms_jnp": round(_median_ms(jnp_fn), 4),
+            "ms_interpret": round(_median_ms(int_fn), 4)}
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="BENCH_kernels.json")
+    args = p.parse_args()
+
+    rows = []
+    t0 = time.time()
+    for K in (16, 128, 512):
+        row = bench_replay(1024, 1024, 32, K)
+        rows.append(row)
+        print(f"replay n=1024 r=32 K={K:>5}: unfused {row['ms_unfused']:8.3f} ms"
+              f"  fused {row['ms_fused']:8.3f} ms  ({row['speedup']}x)",
+              flush=True)
+    for op in ("subcge_apply", "rank1_matmul"):
+        row = bench_interpret(op)
+        rows.append(row)
+        print(f"interpret {op:>13}: jnp {row['ms_jnp']:8.3f} ms"
+              f"  interpret {row['ms_interpret']:8.3f} ms", flush=True)
+
+    out = {"rows": rows, "total_wall_s": round(time.time() - t0, 1),
+           "backend": jax.default_backend()}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+#: Legal values of the ``kernel_backend`` knob (SubCGEConfig / DTrainConfig /
+#: PodConfig).  ``auto`` resolves once per process — Pallas on TPU, the
+#: pure-jnp oracles elsewhere; ``interpret`` runs the real Pallas lowerings
+#: through the interpreter (CI on CPU); ``jnp``/``pallas`` force a path.
+#: Dispatch lives in ``repro.kernels.ops``; DESIGN.md §7 has the contract.
+KERNEL_BACKENDS = ("auto", "pallas", "interpret", "jnp")
+
 
 @dataclasses.dataclass(frozen=True)
 class AttnCfg:

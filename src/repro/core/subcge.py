@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import seeds as seedlib
 from repro.core.messages import pad_pow2
+from repro.kernels import ops as kops
 
 
 class UV(NamedTuple):
@@ -87,6 +88,15 @@ class SubCGEConfig:
     refresh_period: int = 1000   # τ; Algorithm 1 block (A)
     eps: float = 1e-3            # perturbation scale ε
     subspace_dtype: Any = jnp.float32
+    # which implementation the matrix-leaf replay runs through (DESIGN.md §7):
+    # "auto" -> Pallas on TPU, the bitwise pure-jnp path elsewhere;
+    # "interpret" runs the real kernels through the Pallas interpreter.
+    kernel_backend: str = "auto"
+
+    def backend(self, override: str | None = None) -> str:
+        """Concrete backend for this config (override wins when given)."""
+        return kops.resolve_backend(
+            override if override is not None else self.kernel_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -233,14 +243,20 @@ def scatter_A(i: jax.Array, j: jax.Array, coefs: jax.Array,
     return A.at[bidx + (i, j)].add(coefs)
 
 
-def apply_A(leaf: jax.Array, uv: UV, A: jax.Array) -> jax.Array:
-    """leaf + U A V^T (batched over instance dims)."""
-    delta = jnp.einsum("nr,...rs,ms->...nm", uv.U, A, uv.V)
-    return leaf + delta.astype(leaf.dtype)
+def apply_A(leaf: jax.Array, uv: UV, A: jax.Array,
+            backend: str | None = None) -> jax.Array:
+    """leaf + U A V^T (batched over instance dims), via the kernel layer.
+
+    ``backend=None`` resolves the process default (jnp off-TPU — bitwise the
+    historical einsum); callers holding a :class:`SubCGEConfig` pass
+    ``cfg.kernel_backend`` so the knob is captured at trace time.
+    """
+    return kops.subcge_apply(leaf, uv.U, A, uv.V, backend=backend)
 
 
-def delta_from_A(uv: UV, A: jax.Array, dtype) -> jax.Array:
-    return jnp.einsum("nr,...rs,ms->...nm", uv.U, A, uv.V).astype(dtype)
+def delta_from_A(uv: UV, A: jax.Array, dtype,
+                 backend: str | None = None) -> jax.Array:
+    return kops.subcge_delta(uv.U, A, uv.V, dtype, backend=backend)
 
 
 def apply_messages(params: Any, meta: dict[str, LeafMeta], cfg: SubCGEConfig,
@@ -250,9 +266,11 @@ def apply_messages(params: Any, meta: dict[str, LeafMeta], cfg: SubCGEConfig,
     update, vectorized).  ``message_seeds``: (K,) uint32; ``coefs``: (K,)
     already carrying the -η·α/n sign/scale convention of the caller.
 
-    Matrix leaves: one scatter + one batched U A V^T per leaf — O(K + r·d).
+    Matrix leaves: one scatter + one batched U A V^T per leaf — O(K + r·d),
+    dispatched through the kernel layer per ``cfg.kernel_backend``.
     Vector leaves: Σ_k coef_k · N(seed_k) via a scan (memory-light).
     """
+    backend = cfg.backend()
     coords_k = jax.vmap(lambda s: sample_coords(meta, cfg, s))(message_seeds)
 
     def visit(path: str, leaf: jax.Array):
@@ -262,7 +280,7 @@ def apply_messages(params: Any, meta: dict[str, LeafMeta], cfg: SubCGEConfig,
         if m.is_matrix:
             ij = coords_k[path]
             A = scatter_A(ij.i, ij.j, coefs.astype(jnp.float32), cfg.rank)
-            return apply_A(leaf, subspace[path], A)
+            return apply_A(leaf, subspace[path], A, backend)
 
         def body(acc, sc):
             s, c = sc
@@ -327,11 +345,16 @@ def apply_messages_epoch(params: Any, meta: dict[str, LeafMeta],
     epochs        : (E,) int32 refresh-step slots from :func:`epoch_slots`;
                     every non-padding message's epoch must appear here
 
-    Matrix leaves get one scatter + U_e A_e V_e^T per epoch slot — with the
-    common single-epoch batch this is exactly :func:`apply_messages`.  Dense
-    Gaussian (non-2D) leaves depend only on the message seed, never the
-    subspace, so they are applied once, epoch-free.
+    Matrix leaves get one scatter per epoch slot; on the jnp backend the
+    U_e A_e V_e^T applications run sequentially (bitwise the historical
+    path — with the common single-epoch batch this is exactly
+    :func:`apply_messages`), while the kernel backends fold all E slots into
+    one rank-(E·r) fused visit of each weight
+    (:func:`repro.kernels.ops.subcge_apply_epochs` — W streamed once, not E
+    times).  Dense Gaussian (non-2D) leaves depend only on the message seed,
+    never the subspace, so they are applied once, epoch-free.
     """
+    backend = cfg.backend()
     coords_k = jax.vmap(lambda s: sample_coords(meta, cfg, s))(message_seeds)
     cf32 = coefs.astype(jnp.float32)
     msg_epoch = refresh_step(steps, cfg)              # (K,) — floor for < 0
@@ -347,11 +370,18 @@ def apply_messages_epoch(params: Any, meta: dict[str, LeafMeta],
             return leaf
         if m.is_matrix:
             ij = coords_k[path]
-            out = leaf
-            for sub, c_e in zip(slot_subs, slot_coefs):
-                A = scatter_A(ij.i, ij.j, c_e, cfg.rank)
-                out = apply_A(out, sub[path], A)
-            return out
+            if backend == "jnp":
+                out = leaf
+                for sub, c_e in zip(slot_subs, slot_coefs):
+                    A = scatter_A(ij.i, ij.j, c_e, cfg.rank)
+                    out = apply_A(out, sub[path], A, backend)
+                return out
+            A_e = jnp.stack([scatter_A(ij.i, ij.j, c_e, cfg.rank)
+                             for c_e in slot_coefs])          # (E, *B, r, r)
+            U_e = jnp.stack([sub[path].U for sub in slot_subs])
+            V_e = jnp.stack([sub[path].V for sub in slot_subs])
+            return kops.subcge_apply_epochs(leaf, U_e, A_e, V_e,
+                                            backend=backend)
 
         def body(acc, sc):
             s, c = sc
@@ -416,21 +446,23 @@ def accumulate_buffers(buffers: dict[str, jax.Array], meta, cfg: SubCGEConfig,
 
 
 def fold_buffers(params: Any, meta, subspace: dict[str, UV],
-                 buffers: dict[str, jax.Array]) -> Any:
+                 buffers: dict[str, jax.Array],
+                 backend: str | None = None) -> Any:
     """Fold W <- W + U A V^T and conceptually reset A (caller zeroes it).
     Must be called before any subspace refresh (the buffer is only valid
     against the U/V it was accumulated under)."""
     def visit(path: str, leaf: jax.Array):
         if path in buffers:
-            return apply_A(leaf, subspace[path], buffers[path])
+            return apply_A(leaf, subspace[path], buffers[path], backend)
         return leaf
     return seedlib.map_with_paths(visit, params)
 
 
-def effective_params(params: Any, meta, subspace, buffers) -> Any:
+def effective_params(params: Any, meta, subspace, buffers,
+                     backend: str | None = None) -> Any:
     """Buffer-mode effective weights W + U A V^T (computed on the fly in the
     forward pass, as the paper's GPU implementation does)."""
-    return fold_buffers(params, meta, subspace, buffers)
+    return fold_buffers(params, meta, subspace, buffers, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -456,9 +488,11 @@ def momentum_apply(params: Any, meta: dict[str, LeafMeta], cfg: SubCGEConfig,
                    beta: float = 0.9):
     """One momentum step from K messages; returns (params, new_velocity).
 
-    Matrix leaves: μ ← β μ + Σ_k coef_k E_{i_k j_k};  W += U μ V^T.
+    Matrix leaves: μ ← β μ + Σ_k coef_k E_{i_k j_k};  W += U μ V^T
+    (the fold dispatched through the kernel layer per ``cfg.kernel_backend``).
     Vector leaves: plain (momentum-free) application.
     """
+    backend = cfg.backend()
     coords_k = jax.vmap(lambda s: sample_coords(meta, cfg, s))(message_seeds)
     new_vel: dict[str, jax.Array] = {}
 
@@ -471,7 +505,7 @@ def momentum_apply(params: Any, meta: dict[str, LeafMeta], cfg: SubCGEConfig,
             A = scatter_A(ij.i, ij.j, coefs.astype(jnp.float32), cfg.rank)
             mu = beta * velocity[path] + A
             new_vel[path] = mu
-            return apply_A(leaf, subspace[path], mu)
+            return apply_A(leaf, subspace[path], mu, backend)
 
         def body(acc, sc):
             s, c = sc

@@ -84,7 +84,8 @@ class Setup:
             lambda l: jnp.broadcast_to(l, (cfg.n_clients,) + l.shape), p0)
         self.meta = plib.subcge_meta(self.spec)
         self.scfg = SubCGEConfig(rank=cfg.subcge_rank,
-                                 refresh_period=cfg.subcge_tau, eps=cfg.eps)
+                                 refresh_period=cfg.subcge_tau, eps=cfg.eps,
+                                 kernel_backend=cfg.kernel_backend)
         self.n_params = plib.n_params(self.spec)
 
     def batches(self, step: int):

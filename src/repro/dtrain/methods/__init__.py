@@ -81,7 +81,7 @@ METHOD_SPECS: dict[str, MethodSpec] = {
         name="seedflood", make_method=SeedFloodMethod,
         make_transport=_flood_transport,
         consumes=frozenset({"flood_k", "flood_backend", "batched_step",
-                            "epoch_replay", "drain"}),
+                            "epoch_replay", "drain", "kernel_backend"}),
         supports_churn=True),
     "dsgd": _gossip_spec("dsgd", zeroth_order=False, use_lora=False,
                          choco=False),
@@ -97,9 +97,10 @@ METHOD_SPECS: dict[str, MethodSpec] = {
                                use_lora=True, choco=True),
     "gossip_sr": MethodSpec(
         name="gossip_sr", make_method=GossipSRMethod,
-        make_transport=_gossip_sr_transport),
+        make_transport=_gossip_sr_transport,
+        consumes=frozenset({"kernel_backend"})),
     "central_zo": MethodSpec(
         name="central_zo", make_method=CentralZOMethod,
         make_transport=_null_transport,
-        consumes=frozenset({"momentum"})),
+        consumes=frozenset({"momentum", "kernel_backend"})),
 }

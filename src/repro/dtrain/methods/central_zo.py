@@ -39,6 +39,8 @@ class CentralZOMethod(MethodBase):
         n = cfg.n_clients
         arch, meta, scfg = setup.arch, setup.meta, setup.scfg
 
+        kb = scfg.kernel_backend
+
         @jax.jit
         def step_fn(params, velocity, batch, seeds_t, step):
             sub = subcge.subspace_at_step(meta, scfg, cfg.seed, step)
@@ -46,9 +48,10 @@ class CentralZOMethod(MethodBase):
             def one(toks, sd):
                 pert = sample_pert(meta, scfg, sd, scfg.eps)
                 lp = tf.lm_loss(arch, params, {"tokens": toks}, sub=sub_n,
-                                pert=pert)
+                                pert=pert, kernel_backend=kb)
                 lm = tf.lm_loss(arch, params, {"tokens": toks}, sub=sub_n,
-                                pert=pert.with_scale(-scfg.eps))
+                                pert=pert.with_scale(-scfg.eps),
+                                kernel_backend=kb)
                 return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
             alphas, losses = jax.vmap(one)(batch["tokens"], seeds_t)
             coefs = -cfg.lr * alphas / n

@@ -43,14 +43,18 @@ class GossipSRMethod(MethodBase):
         arch, meta, scfg = setup.arch, setup.meta, setup.scfg
         self.scfg = scfg
 
+        kb = scfg.kernel_backend
+
         @jax.jit
         def estimate_all(stacked_p, batch, seeds_t, step):
             sub = epoch_subspace(meta, scfg, cfg.seed, step)
             def one(p, toks, sd):
                 pert = sample_pert(meta, scfg, sd, scfg.eps)
-                lp = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub, pert=pert)
+                lp = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub, pert=pert,
+                                kernel_backend=kb)
                 lm = tf.lm_loss(arch, p, {"tokens": toks}, sub=sub,
-                                pert=pert.with_scale(-scfg.eps))
+                                pert=pert.with_scale(-scfg.eps),
+                                kernel_backend=kb)
                 return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
             return jax.vmap(one)(stacked_p, batch["tokens"], seeds_t)
 

@@ -41,11 +41,16 @@ class SeedFloodMethod(MethodBase):
         meta, scfg, arch = setup.meta, setup.scfg, setup.arch
         self.meta, self.scfg = meta, scfg
 
+        kb = scfg.kernel_backend   # captured at trace time by the fresh
+        #                            per-run jits below — no silent flips
+
         def local_estimate(params_i, batch_i, seed_i, sub):
             pert = sample_pert(meta, scfg, seed_i, scfg.eps)
-            lp = tf.lm_loss(arch, params_i, batch_i, sub=sub, pert=pert)
+            lp = tf.lm_loss(arch, params_i, batch_i, sub=sub, pert=pert,
+                            kernel_backend=kb)
             lm = tf.lm_loss(arch, params_i, batch_i, sub=sub,
-                            pert=pert.with_scale(-scfg.eps))
+                            pert=pert.with_scale(-scfg.eps),
+                            kernel_backend=kb)
             return (lp - lm) / (2 * scfg.eps), 0.5 * (lp + lm)
 
         # (A)+(B) fused, batched path: one dispatch over the stacked client

@@ -35,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
-from repro.configs.base import ArchConfig, ChurnConfig
+from repro.configs.base import KERNEL_BACKENDS, ArchConfig, ChurnConfig
 from repro.data import synthetic
 from repro.dtrain.api import RunResult, Setup, sim_arch  # noqa: F401  (re-export)
 from repro.dtrain.methods import METHOD_SPECS, MethodSpec
@@ -91,6 +91,12 @@ class DTrainConfig:
     checkpoint_every: int = 0
     checkpoint_dir: str = ""
     resume_from: str = ""
+    # which implementation the SubCGE hot paths (matrix-leaf replay + the
+    # perturbed dual forward) run through: "auto" resolves once per process
+    # (Pallas on TPU, the bitwise pure-jnp oracles elsewhere); "interpret"
+    # drives the real Pallas kernels through the interpreter (CI on CPU).
+    # See repro.kernels.ops and DESIGN.md §7.
+    kernel_backend: str = "auto"
 
 
 #: DTrainConfig fields that belong to specific methods.  A non-default value
@@ -99,7 +105,7 @@ class DTrainConfig:
 #: are consumed by enough methods that rejecting them would be noise).
 _METHOD_FIELDS = ("momentum", "choco_density", "flood_k", "flood_backend",
                   "batched_step", "epoch_replay", "drain", "lora_r",
-                  "lora_alpha")
+                  "lora_alpha", "kernel_backend")
 
 _DEFAULTS = {f.name: f.default for f in dataclasses.fields(DTrainConfig)}
 
@@ -117,6 +123,9 @@ def validate_config(cfg: DTrainConfig, spec: MethodSpec | None = None) -> None:
             raise KeyError(f"unknown method '{cfg.method}' "
                            f"(have {sorted(METHOD_SPECS)})")
         spec = METHOD_SPECS[cfg.method]
+    if cfg.kernel_backend not in KERNEL_BACKENDS:
+        raise ValueError(f"kernel_backend must be one of {KERNEL_BACKENDS}, "
+                         f"got {cfg.kernel_backend!r}")
     for field in _METHOD_FIELDS:
         if field in spec.consumes:
             continue

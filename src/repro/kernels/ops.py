@@ -1,47 +1,183 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public dispatch layer for the Pallas kernel suite.
 
-``use_pallas`` defaults to False off-TPU: the dry-run path (CPU backend with
-512 placeholder devices) and the simulator use the pure-jnp references in
-ref.py; on real TPU hardware the Pallas implementations take over.  Tests
-exercise the kernels in interpret mode against the oracles across
-shape/dtype sweeps.
+Every hot-path op has two real implementations behind the one
+``kernel_backend`` knob (legal values: :data:`repro.configs.base.KERNEL_BACKENDS`):
+
+* ``"jnp"``       — the pure-jnp oracles in :mod:`repro.kernels.ref`.  This is
+  bitwise the pre-kernel training stack (the golden-parity suite pins it) and
+  the resolved default off-TPU.
+* ``"pallas"``    — the compiled Pallas TPU lowerings.
+* ``"interpret"`` — the *same* Pallas kernels through the Pallas interpreter,
+  so CI exercises the real kernel bodies on CPU.
+* ``"auto"``      — resolve once per process: ``pallas`` on TPU, ``jnp``
+  elsewhere.
+
+Backend resolution is explicit and cached: ``"auto"`` is resolved exactly once
+(:func:`_resolve_auto` is memoized) instead of re-sniffing ``jax.default_backend()``
+on every call, and the backend any jitted caller sees is a plain Python string
+captured at trace time.  :func:`set_default_backend` changes the process
+default for traces created *afterwards* — per-run code (the dtrain method
+plugins, ``PodConfig``) threads the knob explicitly through fresh per-run jit
+closures, so two runs in one process can never share a stale trace.
+
+The kernel modules are imported lazily inside the dispatchers (they import
+:func:`_tile` from here, and the jnp path should not pay for Pallas imports).
 """
 from __future__ import annotations
 
+import contextlib
+import functools
+
 import jax
 
+from repro.configs.base import KERNEL_BACKENDS
 from repro.kernels import ref as _ref
-from repro.kernels import rank1_matmul as _r1
-from repro.kernels import selective_scan as _scan
-from repro.kernels import subcge_apply as _apply
+
+_default_backend = "auto"
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def subcge_apply(W, U, A, V, *, use_pallas: bool | None = None,
-                 interpret: bool = False):
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    if use_pallas or interpret:
-        return _apply.subcge_apply(W, U, A, V, interpret=interpret)
-    return _ref.subcge_apply(W, U, A, V)
+@functools.lru_cache(maxsize=None)
+def _resolve_auto() -> str:
+    """What ``"auto"`` means on this process — computed once, then frozen, so
+    jitted callers cannot silently flip paths between traces."""
+    return "pallas" if on_tpu() else "jnp"
 
 
-def rank1_matmul(x, W, u, v, s, *, use_pallas: bool | None = None,
-                 interpret: bool = False):
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    if use_pallas or interpret:
-        return _r1.rank1_matmul(x, W, u, v, s, interpret=interpret)
-    return _ref.rank1_matmul(x, W, u, v, s)
+def set_default_backend(backend: str) -> str:
+    """Set the process-default backend; returns the previous value.
+
+    Only affects traces created after the call — already-compiled jit caches
+    keep the backend they captured.
+    """
+    global _default_backend
+    if backend not in KERNEL_BACKENDS:
+        raise ValueError(f"kernel_backend must be one of {KERNEL_BACKENDS}, "
+                         f"got {backend!r}")
+    prev, _default_backend = _default_backend, backend
+    return prev
 
 
-def selective_scan(a, bx, c, h0, *, use_pallas: bool | None = None,
-                   interpret: bool = False):
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    if use_pallas or interpret:
-        return _scan.selective_scan(a, bx, c, h0, interpret=interpret)
-    return _ref.selective_scan(a, bx, c, h0)
+def get_default_backend() -> str:
+    return _default_backend
+
+
+@contextlib.contextmanager
+def default_backend(backend: str):
+    """Scoped :func:`set_default_backend` (tests, benchmarks)."""
+    prev = set_default_backend(backend)
+    try:
+        yield
+    finally:
+        set_default_backend(prev)
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Map a knob value (or None = process default) to a concrete backend:
+    one of ``"jnp" | "pallas" | "interpret"``."""
+    if backend is None:
+        backend = _default_backend
+    if backend not in KERNEL_BACKENDS:
+        raise ValueError(f"kernel_backend must be one of {KERNEL_BACKENDS}, "
+                         f"got {backend!r}")
+    return _resolve_auto() if backend == "auto" else backend
+
+
+# ---------------------------------------------------------------------------
+# tiling
+# ---------------------------------------------------------------------------
+
+def _tile(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``target``, preferring
+    lane-aligned (multiple-of-128) divisors.
+
+    Among all admissible divisors a multiple of 128 wins even when a larger
+    unaligned divisor exists (MXU/VPU lanes are 128 wide); with no aligned
+    divisor the genuinely largest one is returned — e.g.
+    ``_tile(320, 256) == 160`` (not 80), ``_tile(896, 256) == 128`` (128
+    divides 896; the larger 224 does not align).
+    """
+    best, best_aligned = 1, 0
+    for t in range(1, min(target, dim) + 1):
+        if dim % t == 0:
+            best = t
+            if t % 128 == 0:
+                best_aligned = t
+    return best_aligned or best
+
+
+# ---------------------------------------------------------------------------
+# dispatchers
+# ---------------------------------------------------------------------------
+
+def subcge_apply(W, U, A, V, *, backend: str | None = None):
+    """W (*B,n,m) + U (n,r) A (*B,r,r) V (m,r)^T — the SubCGE replay."""
+    b = resolve_backend(backend)
+    if b == "jnp":
+        return _ref.subcge_apply(W, U, A, V)
+    from repro.kernels import subcge_apply as _apply
+    return _apply.subcge_apply(W, U, A, V, interpret=(b == "interpret"))
+
+
+def subcge_apply_epochs(W, U, A, V, *, backend: str | None = None):
+    """W (*B,n,m) + Σ_e U (E,n,r)[e] A (E,*B,r,r)[e] V (E,m,r)[e]^T — the
+    epoch-grouped padded replay layout (one fused visit of W for all τ-epochs
+    present in a flood payload batch)."""
+    b = resolve_backend(backend)
+    if b == "jnp":
+        return _ref.subcge_apply_epochs(W, U, A, V)
+    from repro.kernels import subcge_apply as _apply
+    return _apply.subcge_apply_epochs(W, U, A, V, interpret=(b == "interpret"))
+
+
+def subcge_delta(U, A, V, dtype, *, backend: str | None = None):
+    """U A V^T alone (no base weight), in ``dtype``.  Kernel backends stream
+    a zero W through the fused-apply kernel (delta extraction is not a hot
+    path; it exists so every A-application shares one lowering)."""
+    b = resolve_backend(backend)
+    if b == "jnp":
+        return _ref.subcge_delta(U, A, V, dtype)
+    import jax.numpy as jnp
+    from repro.kernels import subcge_apply as _apply
+    zero = jnp.zeros(A.shape[:-2] + (U.shape[-2], V.shape[-2]), dtype)
+    return _apply.subcge_apply(zero, U, A, V, interpret=(b == "interpret"))
+
+
+def rank1_matmul(x, W, u, v, s, *, backend: str | None = None):
+    """x (M,K) @ (W (K,N) + s·u v^T) — the fused ZO dual forward matmul."""
+    b = resolve_backend(backend)
+    if b == "jnp":
+        return _ref.rank1_matmul(x, W, u, v, s)
+    from repro.kernels import rank1_matmul as _r1
+    return _r1.rank1_matmul(x, W, u, v, s, interpret=(b == "interpret"))
+
+
+def rank1_matmul_t(x, W, u, v, s, *, backend: str | None = None):
+    """x (M,N) @ (W (O,N) + s·u v^T)^T — tied-embedding logits."""
+    b = resolve_backend(backend)
+    if b == "jnp":
+        return _ref.rank1_matmul_t(x, W, u, v, s)
+    from repro.kernels import rank1_matmul as _r1
+    return _r1.rank1_matmul_t(x, W, u, v, s, interpret=(b == "interpret"))
+
+
+def rank1_matmul_expert(x, W, u, v, s, *, backend: str | None = None):
+    """x (E,C,n) @ (W (E,n,m) + s·u[:,e] v[:,e]^T) — per-expert rank-1
+    perturbations, u (n,E), v (m,E)."""
+    b = resolve_backend(backend)
+    if b == "jnp":
+        return _ref.rank1_matmul_expert(x, W, u, v, s)
+    from repro.kernels import rank1_matmul as _r1
+    return _r1.rank1_matmul_expert(x, W, u, v, s, interpret=(b == "interpret"))
+
+
+def selective_scan(a, bx, c, h0, *, backend: str | None = None):
+    """Blocked Mamba selective scan (see kernels/selective_scan.py)."""
+    b = resolve_backend(backend)
+    if b == "jnp":
+        return _ref.selective_scan(a, bx, c, h0)
+    from repro.kernels import selective_scan as _scan
+    return _scan.selective_scan(a, bx, c, h0, interpret=(b == "interpret"))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import _tile
+
 # jax < 0.5 ships this as TPUCompilerParams
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
@@ -41,13 +43,6 @@ def _kernel(x_ref, w_ref, u_ref, v_ref, s_ref, o_ref, acc_ref, xu_ref, *, nk):
         o_ref[...] = (acc_ref[...]
                       + s * xu_ref[...] * v_ref[...].astype(jnp.float32)
                       ).astype(o_ref.dtype)
-
-
-def _tile(dim: int, target: int) -> int:
-    t = min(target, dim)
-    while dim % t != 0:
-        t -= 1
-    return t
 
 
 @functools.partial(jax.jit,
@@ -84,4 +79,132 @@ def rank1_matmul(x: jax.Array, W: jax.Array, u: jax.Array, v: jax.Array,
         interpret=interpret,
     )(x, W, u.reshape(K, 1), v.reshape(1, N),
       jnp.asarray(s, jnp.float32).reshape(1, 1))
+    return out
+
+
+def _kernel_t(x_ref, w_ref, v_ref, u_ref, s_ref, o_ref, acc_ref, xv_ref, *, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xv_ref[...] = jnp.zeros_like(xv_ref)
+
+    x = x_ref[...]
+    # x (bm, bk) · W (bo, bk)^T contracted on the shared bk axis — the MXU
+    # takes the transposed operand natively, no VMEM transpose materialized
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    xv_ref[...] += jnp.dot(x, v_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        s = s_ref[0, 0]
+        o_ref[...] = (acc_ref[...]
+                      + s * xv_ref[...] * u_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bo", "bk", "interpret"))
+def rank1_matmul_t(x: jax.Array, W: jax.Array, u: jax.Array, v: jax.Array,
+                   s, *, bm: int = 256, bo: int = 256, bk: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """x (M,N) @ (W (O,N) + s·u (O,) v (N,)^T)^T -> (M,O).
+
+    The tied-embedding logits matmul: W is stored output-major (vocab, d) and
+    must not be transposed in HBM — the k-loop contracts x and W on their
+    shared N axis, with the rank-1 epilogue s·(x·v)·u^T folded into the final
+    k step exactly as in :func:`rank1_matmul`.
+    """
+    M, N = x.shape
+    O, N2 = W.shape
+    assert N == N2 and u.shape == (O,) and v.shape == (N,)
+    bm = _tile(M, bm)
+    bo = _tile(O, bo)
+    bk = _tile(N, bk)
+    nk = N // bk
+    grid = (M // bm, O // bo, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_t, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),       # x
+            pl.BlockSpec((bo, bk), lambda i, j, k: (j, k)),       # W
+            pl.BlockSpec((bk, 1), lambda i, j, k: (k, 0)),        # v column
+            pl.BlockSpec((1, bo), lambda i, j, k: (0, j)),        # u row
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),         # s
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, O), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bo), jnp.float32),
+                        pltpu.VMEM((bm, 1), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, W, v.reshape(N, 1), u.reshape(1, O),
+      jnp.asarray(s, jnp.float32).reshape(1, 1))
+    return out
+
+
+def _kernel_expert(x_ref, w_ref, u_ref, v_ref, s_ref, o_ref, acc_ref, xu_ref,
+                   *, nk):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xu_ref[...] = jnp.zeros_like(xu_ref)
+
+    x = x_ref[0]
+    acc_ref[...] += jnp.dot(x, w_ref[0], preferred_element_type=jnp.float32)
+    xu_ref[...] += jnp.dot(x, u_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == nk - 1)
+    def _done():
+        s = s_ref[0, 0]
+        o_ref[0] = (acc_ref[...]
+                    + s * xu_ref[...] * v_ref[...].astype(jnp.float32).T
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bc", "bn", "bk", "interpret"))
+def rank1_matmul_expert(x: jax.Array, W: jax.Array, u: jax.Array,
+                        v: jax.Array, s, *, bc: int = 256, bn: int = 256,
+                        bk: int = 512, interpret: bool = False) -> jax.Array:
+    """Batched per-expert rank-1-perturbed matmul:
+    x (E,C,n), W (E,n,m), u (n,E), v (m,E) ->
+    y[e] = x[e] @ W[e] + s·(x[e]·u[:,e]) v[:,e]^T.
+
+    Experts ride the leading (parallel) grid axis like the instance dim of
+    ``subcge_apply``; each expert's u/v columns are sliced straight out of
+    the (dim, E) coordinate panels, and the k-loop epilogue is per-expert.
+    """
+    E, C, n = x.shape
+    E2, n2, m = W.shape
+    assert E == E2 and n == n2 and u.shape == (n, E) and v.shape == (m, E)
+    bc = _tile(C, bc)
+    bn = _tile(m, bn)
+    bk = _tile(n, bk)
+    nk = n // bk
+    grid = (E, C // bc, m // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_expert, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bk), lambda e, i, j, k: (e, i, k)),   # x
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),   # W
+            pl.BlockSpec((bk, 1), lambda e, i, j, k: (k, e)),          # u col
+            pl.BlockSpec((bn, 1), lambda e, i, j, k: (j, e)),          # v col
+            pl.BlockSpec((1, 1), lambda e, i, j, k: (0, 0)),           # s
+        ],
+        out_specs=pl.BlockSpec((1, bc, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, m), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bn), jnp.float32),
+                        pltpu.VMEM((bc, 1), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, W, u, v, jnp.asarray(s, jnp.float32).reshape(1, 1))
     return out

@@ -8,10 +8,31 @@ import jax.numpy as jnp
 def subcge_apply(W: jax.Array, U: jax.Array, A: jax.Array,
                  V: jax.Array) -> jax.Array:
     """W + U A V^T, batched over leading instance dims of W/A.
-    W (*B, n, m), U (n, r), A (*B, r, r), V (m, r)."""
+    W (*B, n, m), U (n, r), A (*B, r, r), V (m, r).
+
+    The delta accumulates in f32 but the add happens in W's dtype — this is
+    bitwise the pre-kernel training stack (``subcge.apply_A``), which the
+    golden-parity suite pins; the Pallas kernels instead add in f32 before
+    the final cast (tolerance-level difference for sub-f32 weights).
+    """
     delta = jnp.einsum("nr,...rs,ms->...nm", U.astype(jnp.float32),
                        A.astype(jnp.float32), V.astype(jnp.float32))
-    return (W.astype(jnp.float32) + delta).astype(W.dtype)
+    return W + delta.astype(W.dtype)
+
+
+def subcge_delta(U: jax.Array, A: jax.Array, V: jax.Array, dtype) -> jax.Array:
+    """U A V^T alone (no base weight).  U (n, r), A (*B, r, r), V (m, r)."""
+    return jnp.einsum("nr,...rs,ms->...nm", U.astype(jnp.float32),
+                      A.astype(jnp.float32), V.astype(jnp.float32)).astype(dtype)
+
+
+def subcge_apply_epochs(W: jax.Array, U: jax.Array, A: jax.Array,
+                        V: jax.Array) -> jax.Array:
+    """W + Σ_e U[e] A[e] V[e]^T — the epoch-grouped replay layout.
+    W (*B, n, m), U (E, n, r), A (E, *B, r, r), V (E, m, r)."""
+    delta = jnp.einsum("enr,e...rs,ems->...nm", U.astype(jnp.float32),
+                       A.astype(jnp.float32), V.astype(jnp.float32))
+    return W + delta.astype(W.dtype)
 
 
 def rank1_matmul(x: jax.Array, W: jax.Array, u: jax.Array, v: jax.Array,
@@ -20,6 +41,29 @@ def rank1_matmul(x: jax.Array, W: jax.Array, u: jax.Array, v: jax.Array,
     y = jnp.dot(x.astype(jnp.float32), W.astype(jnp.float32))
     xu = jnp.dot(x.astype(jnp.float32), u.astype(jnp.float32))
     y = y + jnp.asarray(s, jnp.float32) * xu[:, None] * v.astype(jnp.float32)[None, :]
+    return y.astype(x.dtype)
+
+
+def rank1_matmul_t(x: jax.Array, W: jax.Array, u: jax.Array, v: jax.Array,
+                   s) -> jax.Array:
+    """x @ (W + s·u v^T)^T = x W^T + s (x·v) u^T — tied-embedding logits.
+    x (M,N) W (O,N) u (O,) v (N,) -> (M,O)."""
+    y = jnp.dot(x.astype(jnp.float32), W.astype(jnp.float32).T)
+    xv = jnp.dot(x.astype(jnp.float32), v.astype(jnp.float32))
+    y = y + jnp.asarray(s, jnp.float32) * xv[:, None] * u.astype(jnp.float32)[None, :]
+    return y.astype(x.dtype)
+
+
+def rank1_matmul_expert(x: jax.Array, W: jax.Array, u: jax.Array,
+                        v: jax.Array, s) -> jax.Array:
+    """Per-expert rank-1-perturbed batched matmul.
+    x (E,C,n), W (E,n,m), u (n,E), v (m,E):
+    y[e] = x[e] @ W[e] + s·(x[e]·u[:,e]) v[:,e]^T."""
+    xf = x.astype(jnp.float32)
+    y = jnp.einsum("ecn,enm->ecm", xf, W.astype(jnp.float32))
+    xu = jnp.einsum("ecn,ne->ec", xf, u.astype(jnp.float32))
+    y = y + (jnp.asarray(s, jnp.float32) * xu[..., None]
+             * v.astype(jnp.float32).T[:, None, :])
     return y.astype(x.dtype)
 
 

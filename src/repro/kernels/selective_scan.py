@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import _tile
+
 # jax < 0.5 ships this as TPUCompilerParams
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
@@ -45,13 +47,6 @@ def _kernel(a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, h_ref, *, bt, nt):
     @pl.when(pl.program_id(2) == nt - 1)
     def _done():
         hout_ref[0] = h.astype(hout_ref.dtype)
-
-
-def _tile(dim: int, target: int) -> int:
-    t = min(target, dim)
-    while dim % t != 0:
-        t -= 1
-    return t
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "bt", "interpret"))

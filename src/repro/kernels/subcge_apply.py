@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ops import _tile
+
 
 def _kernel(w_ref, u_ref, v_ref, a_ref, o_ref):
     ua = jnp.dot(u_ref[...].astype(jnp.float32), a_ref[0],
@@ -28,15 +30,6 @@ def _kernel(w_ref, u_ref, v_ref, a_ref, o_ref):
     delta = jnp.dot(ua, v_ref[...].astype(jnp.float32).T,
                     preferred_element_type=jnp.float32)       # (bn, bm)
     o_ref[0] = (w_ref[0].astype(jnp.float32) + delta).astype(o_ref.dtype)
-
-
-def _tile(dim: int, target: int) -> int:
-    """Largest divisor of ``dim`` ≤ target, preferring multiples of 128."""
-    for t in range(min(target, dim), 0, -1):
-        if dim % t == 0 and (t % 128 == 0 or t == min(target, dim) or t < 128):
-            if dim % t == 0:
-                return t
-    return dim
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
@@ -70,4 +63,41 @@ def subcge_apply(W: jax.Array, U: jax.Array, A: jax.Array, V: jax.Array,
         out_shape=jax.ShapeDtypeStruct(Wf.shape, W.dtype),
         interpret=interpret,
     )(Wf, U, V, Af)
+    return out.reshape(W.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def subcge_apply_epochs(W: jax.Array, U: jax.Array, A: jax.Array,
+                        V: jax.Array, *, bn: int = 256, bm: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """W (*B,n,m) + Σ_e U (E,n,r)[e] @ A (E,*B,r,r)[e] @ V (E,m,r)[e]^T.
+
+    The epoch-grouped replay of delayed-flooding payloads: messages whose
+    staleness crosses τ-refresh boundaries partition into E subspace epochs,
+    each with its own (U_e, V_e, A_e).  Rather than streaming W once per
+    epoch, the epochs fold into a single rank-(E·r) visit:
+
+        Σ_e U_e A_e V_e^T  =  [U_1 … U_E] · blockdiag(A_1 … A_E) · [V_1 … V_E]^T
+
+    so the fused-apply kernel runs unchanged at rank E·r — still exactly one
+    HBM read+write of W.  E and r are small (E is pow2-bucketed by
+    ``subcge.epoch_slots``; the block-diagonal is (E·r)² f32, VMEM-trivial).
+    """
+    E, n, r = U.shape
+    m = V.shape[1]
+    batch = W.shape[:-2]
+    nb = 1
+    for b in batch:
+        nb *= b
+    if E == 1:
+        return subcge_apply(W, U[0], A[0], V[0], bn=bn, bm=bm,
+                            interpret=interpret)
+    Uc = jnp.moveaxis(U, 0, 1).reshape(n, E * r)
+    Vc = jnp.moveaxis(V, 0, 1).reshape(m, E * r)
+    Af = A.reshape(E, nb, r, r).astype(jnp.float32)
+    blk = jnp.zeros((nb, E * r, E * r), jnp.float32)
+    for e in range(E):
+        blk = blk.at[:, e * r:(e + 1) * r, e * r:(e + 1) * r].set(Af[e])
+    out = subcge_apply(W.reshape(nb, n, m), Uc, blk, Vc, bn=bn, bm=bm,
+                       interpret=interpret)
     return out.reshape(W.shape)

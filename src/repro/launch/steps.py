@@ -53,9 +53,13 @@ class PodConfig:
     remat_clients: bool = False    # lax.map over clients instead of vmap
     spmd_client_axis: bool = False  # bind the vmapped client axis to the
     #                                 data mesh axes (vmap spmd_axis_name)
+    kernel_backend: str = "auto"   # SubCGE hot-path implementation: on a
+    #                                real pod "auto" means the Pallas kernels
+    #                                (repro.kernels.ops; DESIGN.md §7)
 
     def subcge(self) -> SubCGEConfig:
-        return SubCGEConfig(rank=self.rank, refresh_period=self.tau)
+        return SubCGEConfig(rank=self.rank, refresh_period=self.tau,
+                            kernel_backend=self.kernel_backend)
 
 
 def _rep(mesh: Mesh):
@@ -179,22 +183,26 @@ def build_seedflood_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                               jnp.maximum(step - 1, 0))
             params = jax.tree.map(
                 lambda base, folded: jnp.where(is_refresh, folded, base),
-                params, subcge.fold_buffers(params, meta, old_sub, bufs))
+                params, subcge.fold_buffers(params, meta, old_sub, bufs,
+                                            backend=pod.kernel_backend))
             bufs = jax.tree.map(
                 lambda b: jnp.where(is_refresh, jnp.zeros_like(b), b), bufs)
 
         sub_flat = subcge.subspace_at_step(meta, scfg, pod.base_seed, step)
         sub = nest_subspace(sub_flat)
-        eff = (subcge.effective_params(params, meta, sub_flat, bufs)
+        eff = (subcge.effective_params(params, meta, sub_flat, bufs,
+                                       backend=pod.kernel_backend)
                if buffer_mode else params)
         cids = jnp.arange(n)
         seeds_t = jax.vmap(lambda i: seedlib.client_seed(pod.base_seed, step, i))(cids)
 
         def client_alpha(batch_i, seed_i):
             pert = sample_pert(meta, scfg, seed_i, pod.eps)
-            lp = tf.lm_loss(cfg, eff, batch_i, sub=sub, pert=pert)
+            lp = tf.lm_loss(cfg, eff, batch_i, sub=sub, pert=pert,
+                            kernel_backend=pod.kernel_backend)
             lm = tf.lm_loss(cfg, eff, batch_i, sub=sub,
-                            pert=pert.with_scale(-pod.eps))
+                            pert=pert.with_scale(-pod.eps),
+                            kernel_backend=pod.kernel_backend)
             return (lp - lm) / (2 * pod.eps), 0.5 * (lp + lm)
 
         if pod.remat_clients:

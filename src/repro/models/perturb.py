@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import seeds as seedlib
 from repro.core import subcge
 from repro.core.subcge import IJ, UV, LeafMeta, SubCGEConfig
+from repro.kernels import ops as kops
 from repro.models import params as plib
 
 
@@ -92,25 +93,35 @@ def _mesh_active() -> bool:
 
 
 class Bundle:
-    """params + subspace + perturbation view over one nesting level."""
-    __slots__ = ("p", "uv", "ij", "zv", "scale")
+    """params + subspace + perturbation view over one nesting level.
 
-    def __init__(self, p, uv=None, ij=None, zv=None, scale=None):
+    ``kb`` is the *resolved* kernel backend ("jnp" | "pallas" | "interpret")
+    the perturbed matmuls dispatch through (DESIGN.md §7) — a plain Python
+    string fixed at trace time, threaded from ``forward(kernel_backend=…)``.
+    The unperturbed forward (serving, FO baselines, eval) never dispatches:
+    it is a plain matmul with nothing to fuse.
+    """
+    __slots__ = ("p", "uv", "ij", "zv", "scale", "kb")
+
+    def __init__(self, p, uv=None, ij=None, zv=None, scale=None, kb="jnp"):
         self.p = p
         self.uv = uv
         self.ij = ij
         self.zv = zv
         self.scale = scale
+        self.kb = kb
 
     @classmethod
-    def make(cls, params, subspace_nested=None, pert: Pert | None = None):
+    def make(cls, params, subspace_nested=None, pert: Pert | None = None,
+             kernel_backend: str | None = None):
+        kb = kops.resolve_backend(kernel_backend)
         if pert is None:
-            return cls(params, subspace_nested, None, None, None)
-        return cls(params, subspace_nested, pert.ij, pert.zv, pert.scale)
+            return cls(params, subspace_nested, None, None, None, kb)
+        return cls(params, subspace_nested, pert.ij, pert.zv, pert.scale, kb)
 
     def __getitem__(self, k: str) -> "Bundle":
         return Bundle(self.p[k], _child(self.uv, k), _child(self.ij, k),
-                      _child(self.zv, k), self.scale)
+                      _child(self.zv, k), self.scale, self.kb)
 
     def __contains__(self, k: str) -> bool:
         return k in self.p
@@ -129,24 +140,39 @@ class Bundle:
 
     def dense(self, k: str, x: jax.Array, bias: str | None = None) -> jax.Array:
         """y = x @ W (+b), with the fused rank-1 epilogue when perturbed.
-        W (n, m); x (..., n).  Scalar i/j only (scan/vmap already sliced)."""
+        W (n, m); x (..., n).  Scalar i/j only (scan/vmap already sliced).
+
+        Perturbed + non-jnp backend: one ``ops.rank1_matmul`` kernel call —
+        the rank-1 term rides the matmul's k-loop, W is streamed once."""
         W = self.p[k]
-        y = jnp.einsum("...n,nm->...m", x, W)
         r1 = self._rank1(k)
-        if r1 is not None:
+        if r1 is not None and self.kb != "jnp":
             u, v, s = r1
-            y = y + s.astype(y.dtype) * jnp.einsum("...n,n->...", x, u.astype(x.dtype))[..., None] \
-                * v.astype(y.dtype)
+            y = kops.rank1_matmul(x.reshape(-1, x.shape[-1]), W, u, v, s,
+                                  backend=self.kb)
+            y = y.reshape(x.shape[:-1] + (W.shape[-1],))
+        else:
+            y = jnp.einsum("...n,nm->...m", x, W)
+            if r1 is not None:
+                u, v, s = r1
+                y = y + s.astype(y.dtype) * jnp.einsum("...n,n->...", x, u.astype(x.dtype))[..., None] \
+                    * v.astype(y.dtype)
         if bias is not None:
             y = y + self.vec(bias).astype(y.dtype)
         return y
 
     def dense_t(self, k: str, x: jax.Array) -> jax.Array:
         """y = x @ W^T — for tied-embedding logits.  W (m, n); x (..., n).
-        Rank-1: x (W + s u v^T)^T = x W^T + s (x·v) u^T."""
+        Rank-1: x (W + s u v^T)^T = x W^T + s (x·v) u^T
+        (``ops.rank1_matmul_t`` on the kernel backends)."""
         W = self.p[k]
-        y = jnp.einsum("...n,mn->...m", x, W)
         r1 = self._rank1(k)
+        if r1 is not None and self.kb != "jnp":
+            u, v, s = r1
+            y = kops.rank1_matmul_t(x.reshape(-1, x.shape[-1]), W, u, v, s,
+                                    backend=self.kb)
+            return y.reshape(x.shape[:-1] + (W.shape[0],))
+        y = jnp.einsum("...n,mn->...m", x, W)
         if r1 is not None:
             u, v, s = r1
             y = y + s.astype(y.dtype) * jnp.einsum("...n,n->...", x, v.astype(x.dtype))[..., None] \
@@ -205,8 +231,11 @@ class Bundle:
         W = self.p[k]
         if weight_spec is not None and _mesh_active():
             W = jax.lax.with_sharding_constraint(W, weight_spec)
-        y = jnp.einsum("ecn,enm->ecm", x, W)
         r1 = self._rank1(k)
+        if r1 is not None and self.kb != "jnp":
+            u, v, s = r1          # u (n, E), v (m, E)
+            return kops.rank1_matmul_expert(x, W, u, v, s, backend=self.kb)
+        y = jnp.einsum("ecn,enm->ecm", x, W)
         if r1 is not None:
             u, v, s = r1          # u (n, E), v (m, E)
             xu = jnp.einsum("ecn,ne->ec", x, u.astype(x.dtype))

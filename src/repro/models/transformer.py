@@ -204,14 +204,16 @@ def _apply_slot(slot: LayerCfg, sb: Bundle, x: jax.Array, cache_slot,
 
 def forward(cfg: ArchConfig, params: Any, batch: dict, *,
             sub: Any = None, pert: Pert | None = None,
-            cache: Any = None, pos=0):
+            cache: Any = None, pos=0, kernel_backend: str | None = None):
     """Run the decoder.  Returns (logits, new_cache, aux_loss).
 
     batch: {"tokens": (B, T) int32, optional "embeds": (B, P, edim)} —
     ``embeds`` are the stubbed modality-frontend outputs, prepended after
     projection.  ``pos`` is the absolute position of tokens[:, 0].
+    ``kernel_backend`` picks the implementation of the perturbed matmuls
+    (None -> process default; see repro.kernels.ops / DESIGN.md §7).
     """
-    root = Bundle.make(params, sub, pert)
+    root = Bundle.make(params, sub, pert, kernel_backend)
     be = root["embed"]
     tokens = batch["tokens"]
     x = be.embed("tok", tokens)
@@ -244,14 +246,14 @@ def forward(cfg: ArchConfig, params: Any, batch: dict, *,
         gcache = cache[gk] if cache is not None else None
         scale = pert.scale if pert is not None else None
 
-        def body(carry, xs, g=g, guv=guv, scale=scale):
+        def body(carry, xs, g=g, guv=guv, scale=scale, kb=root.kb):
             xc, aux_c = carry
             pslice, ijslice, zvslice, cslice = xs
             ncs: dict[str, Any] = {}
             for si, slot in enumerate(g.slots):
                 sk = f"s{si}"
                 sb = Bundle(pslice[sk], _child(guv, sk), _child(ijslice, sk),
-                            _child(zvslice, sk), scale)
+                            _child(zvslice, sk), scale, kb)
                 cslot = cslice[sk] if cslice is not None else None
                 xc, nc, aux = _apply_slot(slot, sb, xc, cslot, pos, cfg)
                 ncs[sk] = nc
@@ -274,10 +276,12 @@ def forward(cfg: ArchConfig, params: Any, batch: dict, *,
 # ---------------------------------------------------------------------------
 
 def lm_loss(cfg: ArchConfig, params: Any, batch: dict, *,
-            sub: Any = None, pert: Pert | None = None) -> jax.Array:
+            sub: Any = None, pert: Pert | None = None,
+            kernel_backend: str | None = None) -> jax.Array:
     """Mean next-token cross-entropy over the text segment (frontend embeds,
     if any, are context only)."""
-    logits, _, aux = forward(cfg, params, batch, sub=sub, pert=pert)
+    logits, _, aux = forward(cfg, params, batch, sub=sub, pert=pert,
+                             kernel_backend=kernel_backend)
     tokens = batch["tokens"]
     off = logits.shape[1] - tokens.shape[1]          # n frontend embeds
     Tt = tokens.shape[1]

@@ -1,0 +1,162 @@
+"""The kernel_backend knob end-to-end: the interpret backend drives the real
+Pallas lowerings through the full training stack and must match the bitwise
+jnp oracle path within fp32 tolerance (ISSUE 5 acceptance).
+
+ZO runs are chaotic — alpha=(lp-lm)/2ε amplifies fp32 round-off — so two
+numerically-different-but-correct implementations drift to ~1e-5 within a
+few steps; the run-level comparisons use short horizons and fp32-scale
+tolerances, not bitwise equality (which only the jnp path guarantees).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import archs
+from repro.core import subcge
+from repro.core.subcge import SubCGEConfig
+from repro.dtrain.runner import DTrainConfig, run, sim_arch, validate_config
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.models.perturb import nest_subspace, sample_pert
+
+ARCH = sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64)
+
+
+def _leaves_close(a, b, **kw):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), **kw)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance run: 8 clients, delayed flooding k < D, across a τ boundary
+# ---------------------------------------------------------------------------
+
+def _seedflood_cfg(backend: str) -> DTrainConfig:
+    # ring of 8 has diameter 4; flood_k=1 keeps messages in flight across
+    # the τ=2 refresh boundaries, so the epoch-grouped (E, K) replay layout
+    # (and its fused kernel path) is genuinely exercised; drain flushes the
+    # tail so both runs end at the same delivered-message set.
+    return DTrainConfig(
+        method="seedflood", n_clients=8, topology="ring", steps=4,
+        lr=1e-2, batch_size=2, subcge_rank=4, subcge_tau=2, flood_k=1,
+        drain=True, arch=ARCH, kernel_backend=backend)
+
+
+def test_seedflood_interpret_matches_jnp_full_run():
+    r_jnp = run(_seedflood_cfg("jnp"))
+    r_int = run(_seedflood_cfg("interpret"))
+    np.testing.assert_allclose(r_jnp.loss_curve, r_int.loss_curve,
+                               rtol=1e-3, atol=1e-5)
+    _leaves_close(r_jnp.extra["final_stacked"], r_int.extra["final_stacked"],
+                  rtol=1e-3, atol=5e-4)
+    # both runs flood identical message sets — byte ledgers must agree exactly
+    assert r_jnp.total_bytes == r_int.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# the perturbed forward: Bundle dense / dense_t / expert_dense dispatch
+# ---------------------------------------------------------------------------
+
+def _pert_loss(arch, backend, seed=7):
+    spec = tf.arch_spec(arch)
+    params = plib.init_params(spec, 0)
+    meta = plib.subcge_meta(spec)
+    scfg = SubCGEConfig(rank=4, refresh_period=50, kernel_backend=backend)
+    sub = nest_subspace(subcge.subspace_at_step(meta, scfg, 3, 0))
+    pert = sample_pert(meta, scfg, jnp.uint32(seed), scfg.eps)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, arch.vocab)}
+    if arch.frontend is not None:
+        batch["embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (2, arch.frontend.n_embeds, arch.frontend.embed_dim))
+    return float(tf.lm_loss(arch, params, batch, sub=sub, pert=pert,
+                            kernel_backend=backend))
+
+
+def test_perturbed_lm_loss_interpret_matches_jnp():
+    # sim arch ties embeddings -> covers dense (mlp/attn), dense_t (logits)
+    a = _pert_loss(ARCH, "jnp")
+    b = _pert_loss(ARCH, "interpret")
+    assert np.isfinite(b)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+def test_moe_perturbed_lm_loss_interpret_matches_jnp():
+    # reduced MoE arch -> covers the batched per-expert rank-1 variant
+    arch = archs.reduced(archs.get("kimi-k2-1t-a32b"))
+    a = _pert_loss(arch, "jnp")
+    b = _pert_loss(arch, "interpret")
+    assert np.isfinite(b)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# epoch-grouped replay + momentum fold through the kernel layer
+# ---------------------------------------------------------------------------
+
+def test_apply_messages_epoch_interpret_matches_jnp():
+    arch = ARCH
+    spec = tf.arch_spec(arch)
+    params = plib.init_params(spec, 0)
+    meta = plib.subcge_meta(spec)
+    K = 8
+    seeds = jnp.arange(1, K + 1, dtype=jnp.uint32)
+    coefs = jnp.linspace(-1e-3, 1e-3, K, dtype=jnp.float32)
+    steps = jnp.asarray([0, 3, 9, 10, 11, 19, 20, 25], jnp.int32)  # 4 epochs
+    outs = {}
+    for backend in ("jnp", "interpret"):
+        scfg = SubCGEConfig(rank=5, refresh_period=10, kernel_backend=backend)
+        epochs = jnp.asarray(subcge.epoch_slots(np.asarray(steps), scfg))
+        assert epochs.shape[0] == 4
+        outs[backend] = subcge.apply_messages_epoch(
+            params, meta, scfg, 0, seeds, coefs, steps, epochs)
+    _leaves_close(outs["jnp"], outs["interpret"], rtol=1e-4, atol=1e-5)
+
+
+def test_central_zo_momentum_interpret_matches_jnp():
+    def cfg(backend):
+        return DTrainConfig(method="central_zo", n_clients=4, steps=2,
+                            lr=1e-2, batch_size=2, subcge_rank=4,
+                            momentum=0.9, arch=ARCH, kernel_backend=backend)
+    r_jnp = run(cfg("jnp"))
+    r_int = run(cfg("interpret"))
+    np.testing.assert_allclose(r_jnp.loss_curve, r_int.loss_curve,
+                               rtol=1e-3, atol=1e-5)
+    _leaves_close(r_jnp.extra["final_params"], r_int.extra["final_params"],
+                  rtol=1e-3, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_validate_config_rejects_unknown_backend():
+    cfg = DTrainConfig(method="seedflood", kernel_backend="cuda")
+    with pytest.raises(ValueError, match="kernel_backend"):
+        validate_config(cfg)
+
+
+def test_validate_config_rejects_backend_on_non_subcge_methods():
+    # dsgd never touches the SubCGE kernels — a non-default knob would be
+    # silently ignored, which validate_config treats as a config error
+    cfg = DTrainConfig(method="dsgd", kernel_backend="interpret")
+    with pytest.raises(ValueError, match="kernel_backend"):
+        validate_config(cfg)
+    validate_config(DTrainConfig(method="dsgd"))  # default passes
+
+
+def test_default_backend_is_jnp_off_tpu():
+    from repro.kernels import ops
+    if jax.default_backend() != "tpu":
+        assert ops.resolve_backend("auto") == "jnp"
+        assert SubCGEConfig().backend() == "jnp"
+
+
+def test_scfg_backend_override():
+    scfg = SubCGEConfig(kernel_backend="interpret")
+    assert scfg.backend() == "interpret"
+    assert scfg.backend("jnp") == "jnp"

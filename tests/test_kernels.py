@@ -1,15 +1,120 @@
-"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps,
+the shared ``_tile`` helper, and the kernel_backend dispatch contract."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs.base import KERNEL_BACKENDS
 from repro.kernels import ops, ref
 
 
+# ---------------------------------------------------------------------------
+# _tile: one shared helper, bug-fixed (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+def test_tile_320_256_regression():
+    # the historical subcge_apply._tile returned 80 here, skipping the valid
+    # 160 — pinned so the "largest admissible divisor" contract can't rot
+    assert ops._tile(320, 256) == 160
+
+
+@pytest.mark.parametrize("dim,target,want", [
+    (128, 256, 128),    # whole dim fits
+    (256, 256, 256),
+    (512, 256, 256),    # aligned divisor at target
+    (896, 256, 128),    # 128 divides 896; the larger 224 is unaligned
+    (384, 256, 128),    # ditto: 192 is larger but unaligned
+    (320, 256, 160),    # no aligned divisor -> genuinely largest
+    (96, 256, 96),
+    (7, 256, 7),
+    (100, 64, 50),
+    (1, 256, 1),
+])
+def test_tile_cases(dim, target, want):
+    assert ops._tile(dim, target) == want
+
+
+@pytest.mark.parametrize("dim", [1, 7, 96, 100, 320, 512, 896, 1000])
+@pytest.mark.parametrize("target", [1, 128, 256, 512])
+def test_tile_properties(dim, target):
+    t = ops._tile(dim, target)
+    assert 1 <= t <= max(1, min(dim, target))
+    assert dim % t == 0
+    # preference contract: if any multiple-of-128 divisor is admissible, the
+    # result is one of them — and the largest such
+    aligned = [d for d in range(1, min(dim, target) + 1)
+               if dim % d == 0 and d % 128 == 0]
+    if aligned:
+        assert t == max(aligned)
+    else:
+        assert t == max(d for d in range(1, min(dim, target) + 1)
+                        if dim % d == 0)
+
+
+def test_tile_shared_by_all_kernel_modules():
+    from repro.kernels import rank1_matmul, selective_scan, subcge_apply
+    assert subcge_apply._tile is ops._tile
+    assert rank1_matmul._tile is ops._tile
+    assert selective_scan._tile is ops._tile
+
+
+# ---------------------------------------------------------------------------
+# backend resolution: explicit, cached, no per-call sniffing
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_values():
+    assert ops.resolve_backend("jnp") == "jnp"
+    assert ops.resolve_backend("pallas") == "pallas"
+    assert ops.resolve_backend("interpret") == "interpret"
+    assert ops.resolve_backend("auto") in ("jnp", "pallas")
+    with pytest.raises(ValueError):
+        ops.resolve_backend("cuda")
+
+
+def test_auto_resolution_is_cached(monkeypatch):
+    # the "auto" meaning is frozen at first use: even if the platform sniff
+    # were to change mid-process, already-resolved callers keep their path
+    first = ops.resolve_backend("auto")
+    monkeypatch.setattr(ops, "on_tpu", lambda: True)
+    assert ops.resolve_backend("auto") == first
+
+
+def test_default_backend_roundtrip():
+    assert ops.get_default_backend() in KERNEL_BACKENDS
+    prev = ops.set_default_backend("interpret")
+    try:
+        assert ops.get_default_backend() == "interpret"
+        assert ops.resolve_backend() == "interpret"
+    finally:
+        ops.set_default_backend(prev)
+    with pytest.raises(ValueError):
+        ops.set_default_backend("nope")
+    with ops.default_backend("jnp"):
+        assert ops.resolve_backend() == "jnp"
+
+
+def test_jnp_dispatch_is_bitwise_the_oracle():
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    W = jax.random.normal(ks[0], (96, 80))
+    U = jax.random.normal(ks[1], (96, 8))
+    V = jax.random.normal(ks[2], (80, 8))
+    A = jax.random.normal(ks[3], (8, 8))
+    got = ops.subcge_apply(W, U, A, V, backend="jnp")
+    want = ref.subcge_apply(W, U, A, V)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# ---------------------------------------------------------------------------
+# subcge_apply: W += U A V^T  (instance/batch dims share U/V)
+# ---------------------------------------------------------------------------
+
 @pytest.mark.parametrize("shape,r", [
     ((128, 128), 8), ((256, 512), 32), ((384, 128), 16),
+    ((320, 896), 8),                      # non-divisible-by-256 dims
+    ((320, 64), 4), ((96, 320), 2),       # odd tiles both axes, multiple ranks
     ((3, 128, 256), 32), ((2, 4, 128, 128), 8),
+    ((2, 320, 96), 16),                   # batch dims x non-divisible dims
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_subcge_apply_kernel(shape, r, dtype):
@@ -19,7 +124,7 @@ def test_subcge_apply_kernel(shape, r, dtype):
     U = jax.random.normal(ks[1], (n, r), jnp.float32)
     V = jax.random.normal(ks[2], (m, r), jnp.float32)
     A = jax.random.normal(ks[3], shape[:-2] + (r, r), jnp.float32)
-    got = ops.subcge_apply(W, U, A, V, interpret=True)
+    got = ops.subcge_apply(W, U, A, V, backend="interpret")
     want = ref.subcge_apply(W, U, A, V)
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(got, jnp.float32),
@@ -27,8 +132,56 @@ def test_subcge_apply_kernel(shape, r, dtype):
                                rtol=tol, atol=tol * 10)
 
 
+@pytest.mark.parametrize("E", [1, 2, 4])
+@pytest.mark.parametrize("batch", [(), (3,)])
+def test_subcge_apply_epochs_kernel(E, batch):
+    n, m, r = 96, 320, 5
+    ks = jax.random.split(jax.random.PRNGKey(E + len(batch)), 4)
+    W = jax.random.normal(ks[0], batch + (n, m))
+    U = jax.random.normal(ks[1], (E, n, r))
+    V = jax.random.normal(ks[2], (E, m, r))
+    A = jax.random.normal(ks[3], (E,) + batch + (r, r))
+    got = ops.subcge_apply_epochs(W, U, A, V, backend="interpret")
+    want = ref.subcge_apply_epochs(W, U, A, V)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_subcge_apply_epochs_matches_sequential_single_epoch_applies():
+    # the rank-(E·r) block-diagonal fold == applying each epoch in turn
+    n, m, r, E = 64, 80, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    W = jax.random.normal(ks[0], (n, m))
+    U = jax.random.normal(ks[1], (E, n, r))
+    V = jax.random.normal(ks[2], (E, m, r))
+    A = jax.random.normal(ks[3], (E, r, r))
+    seq = W
+    for e in range(E):
+        seq = ref.subcge_apply(seq, U[e], A[e], V[e])
+    got = ops.subcge_apply_epochs(W, U, A, V, backend="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(seq),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_subcge_delta():
+    n, m, r = 320, 96, 6
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    U = jax.random.normal(ks[0], (n, r))
+    V = jax.random.normal(ks[1], (m, r))
+    A = jax.random.normal(ks[2], (r, r))
+    got = ops.subcge_delta(U, A, V, jnp.float32, backend="interpret")
+    want = ref.subcge_delta(U, A, V, jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rank1_matmul family: the fused ZO dual forward
+# ---------------------------------------------------------------------------
+
 @pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 512, 128),
-                                 (64, 384, 256), (512, 128, 512)])
+                                 (64, 384, 256), (512, 128, 512),
+                                 (40, 320, 96), (24, 896, 320)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("s", [0.0, 1e-3, -2.5])
 def test_rank1_matmul_kernel(mkn, dtype, s):
@@ -38,7 +191,7 @@ def test_rank1_matmul_kernel(mkn, dtype, s):
     W = jax.random.normal(ks[1], (K, N), dtype)
     u = jax.random.normal(ks[2], (K,), jnp.float32)
     v = jax.random.normal(ks[3], (N,), jnp.float32)
-    got = ops.rank1_matmul(x, W, u, v, s, interpret=True)
+    got = ops.rank1_matmul(x, W, u, v, s, backend="interpret")
     want = ref.rank1_matmul(x, W, u, v, s)
     tol = 1e-4 if dtype == jnp.float32 else 4e-2
     np.testing.assert_allclose(np.asarray(got, jnp.float32),
@@ -52,10 +205,80 @@ def test_rank1_matmul_zero_scale_is_plain_matmul():
     W = jax.random.normal(ks[1], (256, 128))
     u = jax.random.normal(ks[2], (256,))
     v = jax.random.normal(ks[3], (128,))
-    got = ops.rank1_matmul(x, W, u, v, 0.0, interpret=True)
+    got = ops.rank1_matmul(x, W, u, v, 0.0, backend="interpret")
     np.testing.assert_allclose(np.asarray(got), np.asarray(x @ W),
                                rtol=1e-5, atol=1e-4)
 
+
+@pytest.mark.parametrize("mno", [(40, 96, 320), (128, 128, 256),
+                                 (64, 320, 896)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s", [1e-3, -0.7])
+def test_rank1_matmul_t_kernel(mno, dtype, s):
+    M, N, O = mno                 # x (M,N) @ W (O,N)^T -> (M,O)
+    ks = jax.random.split(jax.random.PRNGKey(M + N + O), 4)
+    x = jax.random.normal(ks[0], (M, N), dtype)
+    W = jax.random.normal(ks[1], (O, N), dtype)
+    u = jax.random.normal(ks[2], (O,), jnp.float32)
+    v = jax.random.normal(ks[3], (N,), jnp.float32)
+    got = ops.rank1_matmul_t(x, W, u, v, s, backend="interpret")
+    want = ref.rank1_matmul_t(x, W, u, v, s)
+    tol = 1e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32),
+                               rtol=tol, atol=tol * 20)
+
+
+def test_rank1_matmul_t_is_rank1_matmul_of_transpose():
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = jax.random.normal(ks[0], (32, 96))
+    W = jax.random.normal(ks[1], (80, 96))
+    u = jax.random.normal(ks[2], (80,))
+    v = jax.random.normal(ks[3], (96,))
+    a = ops.rank1_matmul_t(x, W, u, v, 1.3, backend="interpret")
+    b = ops.rank1_matmul(x, W.T, v, u, 1.3, backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("ecnm", [(4, 24, 96, 64), (2, 128, 64, 320),
+                                  (8, 16, 320, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rank1_matmul_expert_kernel(ecnm, dtype):
+    E, C, n, m = ecnm
+    ks = jax.random.split(jax.random.PRNGKey(E * C + n + m), 4)
+    x = jax.random.normal(ks[0], (E, C, n), dtype)
+    W = jax.random.normal(ks[1], (E, n, m), dtype)
+    u = jax.random.normal(ks[2], (n, E), jnp.float32)
+    v = jax.random.normal(ks[3], (m, E), jnp.float32)
+    got = ops.rank1_matmul_expert(x, W, u, v, -0.3, backend="interpret")
+    want = ref.rank1_matmul_expert(x, W, u, v, -0.3)
+    tol = 1e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32),
+                               rtol=tol, atol=tol * 20)
+
+
+def test_rank1_kernels_accept_traced_scale():
+    # the dual forward flips s = ±ε under jit — s must be traceable
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    x = jax.random.normal(ks[0], (16, 64))
+    W = jax.random.normal(ks[1], (64, 32))
+    u = jax.random.normal(ks[2], (64,))
+    v = jax.random.normal(ks[3], (32,))
+
+    @jax.jit
+    def f(s):
+        return ops.rank1_matmul(x, W, u, v, s, backend="interpret")
+
+    np.testing.assert_allclose(np.asarray(f(0.5)),
+                               np.asarray(ref.rank1_matmul(x, W, u, v, 0.5)),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("btdn", [(1, 64, 128, 16), (2, 128, 128, 8),
                                   (1, 96, 256, 4)])
@@ -66,7 +289,7 @@ def test_selective_scan_kernel(btdn):
     bx = 0.1 * jax.random.normal(ks[1], (B, T, D, N))
     c = jax.random.normal(ks[2], (B, T, N))
     h0 = jax.random.normal(ks[3], (B, D, N))
-    got_y, got_h = ops.selective_scan(a, bx, c, h0, interpret=True)
+    got_y, got_h = ops.selective_scan(a, bx, c, h0, backend="interpret")
     want_y, want_h = ref.selective_scan(a, bx, c, h0)
     np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
                                rtol=1e-4, atol=1e-4)
@@ -83,7 +306,7 @@ def test_selective_scan_kernel_matches_model_layer():
     bx = 0.1 * jax.random.normal(ks[1], (B, T, D, N))
     h0 = jnp.zeros((B, D, N))
     c = jax.random.normal(ks[2], (B, T, N))
-    y_k, h_k = ops.selective_scan(a, bx, c, h0, interpret=True)
+    y_k, h_k = ops.selective_scan(a, bx, c, h0, backend="interpret")
     h_all, h_last = _ssm_chunked(a, bx, h0, chunk=16)
     y_ref = jnp.einsum("btdn,btn->btd", h_all, c)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
