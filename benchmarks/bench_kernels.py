@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import subcge
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref  # sfcheck: noqa[SF006] -- benchmarks time the raw oracle against the dispatched kernels
 
 
 def _median_ms(fn, reps: int = 7) -> float:

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import archs
-from repro.core import subcge, zo, seeds as seedlib
+from repro.core import subcge, zo
 from repro.core.messages import MESSAGE_BYTES, fmt_bytes
 from repro.core.subcge import SubCGEConfig
 from repro.dtrain.runner import DTrainConfig, run, sim_arch
@@ -80,15 +80,9 @@ def fig1_comm_vs_perf(fast: bool = True):
 def table2_client_scaling(fast: bool = True):
     rows = []
     sizes = [4, 8] if fast else [4, 8, 16, 32]
-    base = {}
     for m in ("seedflood", "dsgd"):
         for n in sizes:
             r = _run(_base_cfg(fast, method=m, n_clients=n))
-            if (m, "base") not in base:
-                base[(m, "base")] = r.gmp or 1.0
-            rel = 100.0 * r.gmp / max(base[("dsgd", "base")]
-                                      if ("dsgd", "base") in base else r.gmp,
-                                      1e-9)
             rows.append((f"table2/{m}/n={n}", f"{r.gmp:.4f}",
                          f"consensus_err={r.consensus_error:.2e}"))
     return rows

@@ -11,7 +11,6 @@ config (125M params) which takes a while on one CPU core but is the honest
 "train a ~100M model for a few hundred steps" driver.
 """
 import argparse
-import os
 
 from repro.checkpoint import ckpt
 from repro.configs import archs

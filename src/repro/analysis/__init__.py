@@ -1,0 +1,39 @@
+"""sfcheck — AST-based invariant checker for the SeedFlood tree.
+
+SeedFlood's correctness rests on invariants no runtime test can enforce
+exhaustively: every perturbation must be reconstructible from integer
+seeds alone (seed hygiene), jit traces must not close over host state
+(trace safety), float accumulation must happen in a deterministic order
+(bitwise consensus/resume), every byte that crosses the network must be
+charged to the CommLedger, and every kernel call must route through the
+``ops`` dispatch layer.  ``sfcheck`` lint-checks those invariants at the
+source level, before a trace ever runs:
+
+    PYTHONPATH=src python -m repro.analysis src tests benchmarks examples
+
+Rules (DESIGN.md §8 maps each to the invariant and the historical bug):
+
+* SF001 seed hygiene           — no global RNG state, no unseeded RNGs,
+                                 no wall-clock-derived seeds
+* SF002 trace safety           — no host syncs / wall clock / mutable
+                                 global capture inside jitted functions
+* SF003 iteration order        — no iteration over sets or filesystem
+                                 listings feeding order-sensitive work
+* SF004 config consumption     — every config field is read somewhere
+                                 (no silently-ignored knobs)
+* SF005 ledger conservation    — network enqueues only happen inside
+                                 Transport classes that own a CommLedger
+* SF006 kernel dispatch        — no ``pallas_call`` / ``kernels.ref``
+                                 call sites outside ``repro/kernels``
+
+Suppress a finding with a justified inline comment:
+
+    x = risky()  # sfcheck: noqa[SF003] -- why this is safe
+
+An unjustified suppression is itself an error (SF000): the comment must
+say *why* the invariant holds at that site.
+"""
+from repro.analysis.engine import (  # noqa: F401  (public API re-export)
+    Diagnostic, Project, SourceFile, check_paths, main, run_rules,
+)
+from repro.analysis.rules import RULES  # noqa: F401  (public API re-export)

@@ -1,0 +1,293 @@
+"""The sfcheck rule engine: source loading, suppressions, and the driver.
+
+The engine is deliberately small and stdlib-only (``ast`` + ``re``):
+
+* :class:`SourceFile` — one parsed file: AST, per-line ``# sfcheck: noqa``
+  suppressions, and path-segment helpers rules use to scope themselves.
+* :class:`Project`    — every file of one run plus the cross-module
+  indexes (class hierarchy) that the project-level rules (SF004/SF005)
+  need; constructible from in-memory sources so rule fixtures don't
+  touch the filesystem.
+* :func:`run_rules`   — per-file visitors + project passes, then the
+  suppression filter.  A suppression without a justification comment is
+  itself reported (SF000) — the tree must record *why* each invariant
+  hold at each suppressed site, not merely that someone silenced it.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import io
+import re
+import sys
+import tokenize
+from pathlib import Path, PurePosixPath
+from typing import Iterable, Sequence
+
+#: Engine-level code for malformed / unjustified suppression comments.
+SUPPRESSION_CODE = "SF000"
+#: Engine-level code for files that do not parse at all.
+PARSE_ERROR_CODE = "SF900"
+
+_NOQA_RE = re.compile(
+    r"#\s*sfcheck:\s*noqa"            # the marker
+    r"(?:\[(?P<codes>[A-Z0-9,\s]*)\])?"  # optional [SF001,SF003]
+    r"(?P<rest>.*)$")                 # justification tail
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding: ``path:line:col: CODE message``."""
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int
+    codes: frozenset[str] | None      # None = blanket (all codes)
+    justification: str
+
+
+class SourceFile:
+    """One file under analysis: text, AST, and suppression table."""
+
+    def __init__(self, rel: str, text: str):
+        self.rel = PurePosixPath(rel).as_posix()
+        self.parts = PurePosixPath(self.rel).parts
+        self.text = text
+        self.lines = text.splitlines()
+        self.parse_error: SyntaxError | None = None
+        try:
+            self.tree: ast.Module | None = ast.parse(text)
+        except SyntaxError as e:
+            self.tree = None
+            self.parse_error = e
+        self.suppressions: dict[int, Suppression] = {}
+        # real COMMENT tokens only — "# sfcheck: noqa" inside a string
+        # literal (e.g. this checker's own fixtures) is not a suppression
+        for lineno, comment in self._comments(text):
+            m = _NOQA_RE.search(comment)
+            if m is None:
+                continue
+            codes = None
+            if m.group("codes") is not None:
+                codes = frozenset(
+                    c.strip() for c in m.group("codes").split(",") if c.strip())
+            just = m.group("rest").strip().lstrip("-—").strip()
+            self.suppressions[lineno] = Suppression(lineno, codes, just)
+
+    @staticmethod
+    def _comments(text: str) -> list[tuple[int, str]]:
+        try:
+            return [(tok.start[0], tok.string)
+                    for tok in tokenize.generate_tokens(
+                        io.StringIO(text).readline)
+                    if tok.type == tokenize.COMMENT]
+        except (tokenize.TokenError, SyntaxError):
+            # unparsable file: SF900 is reported anyway; best-effort scan
+            return [(i, line) for i, line in
+                    enumerate(text.splitlines(), start=1) if "#" in line]
+
+    @classmethod
+    def from_path(cls, path: Path, root: Path) -> "SourceFile":
+        try:
+            rel = path.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        return cls(rel, path.read_text(encoding="utf-8"))
+
+    # -- path predicates rules scope themselves with --------------------------
+
+    def in_dir(self, name: str) -> bool:
+        """True when a path segment equals ``name`` (e.g. "launch")."""
+        return name in self.parts[:-1]
+
+    @property
+    def top(self) -> str:
+        """First path segment: "src", "tests", "benchmarks", "examples"."""
+        return self.parts[0] if len(self.parts) > 1 else ""
+
+    def is_suppressed(self, diag: Diagnostic) -> bool:
+        sup = self.suppressions.get(diag.line)
+        if sup is None:
+            return False
+        return sup.codes is None or diag.code in sup.codes
+
+
+class Project:
+    """All files of one run + lazily built cross-module indexes."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+        self._class_index: dict[str, list[tuple[SourceFile, ast.ClassDef]]] | None = None
+
+    @classmethod
+    def from_sources(cls, sources: dict[str, str]) -> "Project":
+        """In-memory construction (rule fixtures): {rel_path: source_text}."""
+        return cls([SourceFile(rel, text) for rel, text in sources.items()])
+
+    def parsed(self) -> Iterable[SourceFile]:
+        return (f for f in self.files if f.tree is not None)
+
+    # -- class hierarchy (the lightweight cross-module pass) -------------------
+
+    def class_index(self) -> dict[str, list[tuple[SourceFile, ast.ClassDef]]]:
+        if self._class_index is None:
+            idx: dict[str, list[tuple[SourceFile, ast.ClassDef]]] = {}
+            for f in self.parsed():
+                for node in ast.walk(f.tree):
+                    if isinstance(node, ast.ClassDef):
+                        idx.setdefault(node.name, []).append((f, node))
+            self._class_index = idx
+        return self._class_index
+
+    def subclasses_of(self, base: str) -> set[str]:
+        """Names of ``base`` and all its transitive subclasses, resolved by
+        class *name* across modules (bases written as ``mod.Cls`` match on
+        the final attribute) — deliberately approximate but cheap."""
+        idx = self.class_index()
+        children: dict[str, set[str]] = {}
+        for name, defs in idx.items():
+            for _, node in defs:
+                for b in node.bases:
+                    bname = None
+                    if isinstance(b, ast.Name):
+                        bname = b.id
+                    elif isinstance(b, ast.Attribute):
+                        bname = b.attr
+                    if bname is not None:
+                        children.setdefault(bname, set()).add(name)
+        out, frontier = {base}, [base]
+        while frontier:
+            for sub in children.get(frontier.pop(), ()):
+                if sub not in out:
+                    out.add(sub)
+                    frontier.append(sub)
+        return out
+
+
+def _check_suppressions(project: Project,
+                        active_codes: set[str]) -> list[Diagnostic]:
+    """SF000: every suppression must name known codes and carry a reason."""
+    out = []
+    for f in project.files:
+        for sup in f.suppressions.values():
+            if sup.codes is not None:
+                unknown = [c for c in sup.codes if c not in active_codes]
+                if unknown:
+                    out.append(Diagnostic(
+                        SUPPRESSION_CODE, f.rel, sup.line, 1,
+                        f"suppression names unknown rule(s) "
+                        f"{sorted(unknown)}"))
+            if not sup.justification:
+                out.append(Diagnostic(
+                    SUPPRESSION_CODE, f.rel, sup.line, 1,
+                    "suppression without a justification — say why the "
+                    "invariant holds here: # sfcheck: noqa[SFxxx] -- <why>"))
+    return out
+
+
+def run_rules(project: Project, rules=None,
+              select: set[str] | None = None) -> list[Diagnostic]:
+    """Run every rule over ``project``; returns unsuppressed diagnostics,
+    sorted by (path, line, code)."""
+    if rules is None:
+        from repro.analysis.rules import RULES
+        rules = RULES
+    if select:
+        rules = [r for r in rules if r.code in select]
+    diags: list[Diagnostic] = []
+    for f in project.files:
+        if f.parse_error is not None:
+            diags.append(Diagnostic(
+                PARSE_ERROR_CODE, f.rel, f.parse_error.lineno or 1,
+                f.parse_error.offset or 1,
+                f"syntax error: {f.parse_error.msg}"))
+    for rule in rules:
+        diags.extend(rule.check_project(project))
+        for f in project.parsed():
+            diags.extend(rule.check_file(f, project))
+    by_rel = {f.rel: f for f in project.files}
+    diags = [d for d in diags
+             if d.path not in by_rel or not by_rel[d.path].is_suppressed(d)]
+    all_codes = {r.code for r in rules} | {SUPPRESSION_CODE, PARSE_ERROR_CODE}
+    diags.extend(_check_suppressions(project, all_codes))
+    return sorted(diags, key=lambda d: (d.path, d.line, d.col, d.code))
+
+
+# ---------------------------------------------------------------------------
+# filesystem driver / CLI
+# ---------------------------------------------------------------------------
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules"}
+
+
+def discover(paths: Sequence[str | Path], root: Path) -> list[SourceFile]:
+    files: list[SourceFile] = []
+    seen: set[Path] = set()
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            cands = sorted(q for q in p.rglob("*.py")
+                           if not any(part in _SKIP_DIRS or
+                                      part.startswith(".")
+                                      for part in q.parts))
+        else:
+            cands = [p]
+        for q in cands:
+            rq = q.resolve()
+            if rq not in seen:
+                seen.add(rq)
+                files.append(SourceFile.from_path(q, root))
+    return files
+
+
+def check_paths(paths: Sequence[str | Path], root: str | Path | None = None,
+                select: set[str] | None = None) -> list[Diagnostic]:
+    root = Path(root) if root is not None else Path.cwd()
+    project = Project(discover(paths, root))
+    return run_rules(project, select=select)
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    from repro.analysis.rules import RULES
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="sfcheck: AST invariant checker for the SeedFlood tree")
+    parser.add_argument("paths", nargs="*",
+                        default=["src", "tests", "benchmarks", "examples"],
+                        help="files/directories to check (default: the tree)")
+    parser.add_argument("--select", default="",
+                        help="comma-separated rule codes to run (default all)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalogue and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for r in RULES:
+            print(f"{r.code}  {r.name}: {r.summary}")
+        print(f"{SUPPRESSION_CODE}  suppression-hygiene: noqa comments must "
+              "name known rules and carry a justification")
+        return 0
+
+    select = ({c.strip() for c in args.select.split(",") if c.strip()}
+              or None)
+    paths = [p for p in args.paths if Path(p).exists()]
+    project = Project(discover(paths, Path.cwd()))
+    diags = run_rules(project, select=select)
+    for d in diags:
+        print(d.render())
+    if diags:
+        print(f"\nsfcheck: {len(diags)} finding(s) in "
+              f"{len(project.files)} file(s)", file=sys.stderr)
+        return 1
+    print(f"sfcheck: {len(project.files)} file(s) clean", file=sys.stderr)
+    return 0

@@ -1,0 +1,51 @@
+"""The SF0xx rule catalogue.
+
+Each rule is a tiny object with a ``code``/``name``/``summary`` and two
+hooks: ``check_file(file, project)`` for per-file AST visits and
+``check_project(project)`` for the cross-module passes (config-field
+consumption, the Transport class hierarchy).  DESIGN.md §8 maps each
+rule to the invariant it guards and the historical bug that motivated it.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.analysis.engine import Diagnostic, Project, SourceFile
+
+
+class Rule:
+    """Base: rules override one or both hooks."""
+
+    code: str = "SF999"
+    name: str = "abstract"
+    summary: str = ""
+
+    def check_file(self, file: SourceFile,
+                   project: Project) -> Iterable[Diagnostic]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        return ()
+
+    def diag(self, file: SourceFile, node, message: str) -> Diagnostic:
+        return Diagnostic(self.code, file.rel,
+                          getattr(node, "lineno", 1),
+                          getattr(node, "col_offset", 0) + 1, message)
+
+
+from repro.analysis.rules.sf001_seed_hygiene import SeedHygieneRule        # noqa: E402
+from repro.analysis.rules.sf002_trace_safety import TraceSafetyRule        # noqa: E402
+from repro.analysis.rules.sf003_iteration_order import IterationOrderRule  # noqa: E402
+from repro.analysis.rules.sf004_config_fields import ConfigFieldsRule      # noqa: E402
+from repro.analysis.rules.sf005_ledger import LedgerConservationRule       # noqa: E402
+from repro.analysis.rules.sf006_kernel_dispatch import KernelDispatchRule  # noqa: E402
+
+#: The registry, in code order.  ``run_rules`` iterates exactly this.
+RULES: list[Rule] = [
+    SeedHygieneRule(),
+    TraceSafetyRule(),
+    IterationOrderRule(),
+    ConfigFieldsRule(),
+    LedgerConservationRule(),
+    KernelDispatchRule(),
+]

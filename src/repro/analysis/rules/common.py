@@ -1,0 +1,81 @@
+"""Shared AST machinery for the SF0xx rules.
+
+The one abstraction every rule leans on is *canonical names*: an import
+map (local alias -> dotted module/object path) plus :func:`canonical`,
+which rewrites an attribute chain like ``np.random.seed`` into
+``numpy.random.seed`` regardless of what the file imported numpy as.
+Rules then match on canonical prefixes instead of guessing aliases.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+
+def import_map(tree: ast.Module) -> dict[str, str]:
+    """Local name -> fully qualified dotted path, from every import
+    statement in the file (function-local imports included: rules care
+    about what a name *means*, not where it was bound)."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                local = a.asname or a.name.split(".")[0]
+                out[local] = a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def canonical(node: ast.AST, imports: dict[str, str]) -> str | None:
+    """Canonicalized dotted path of a Name/Attribute chain: the leading
+    segment is resolved through the import map (``np`` -> ``numpy``,
+    ``kops`` -> ``repro.kernels.ops``)."""
+    d = dotted(node)
+    if d is None:
+        return None
+    head, _, rest = d.partition(".")
+    base = imports.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def call_canonical(node: ast.Call, imports: dict[str, str]) -> str | None:
+    return canonical(node.func, imports)
+
+
+def walk_scope(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested function /
+    class *definitions* (their bodies are separate scopes)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def functions_in(tree: ast.AST) -> Iterator[ast.FunctionDef | ast.AsyncFunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def parent_map(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    return {child: node for node in ast.walk(tree)
+            for child in ast.iter_child_nodes(node)}

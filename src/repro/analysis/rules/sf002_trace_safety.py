@@ -1,0 +1,183 @@
+"""SF002 — trace safety.
+
+A function handed to ``jax.jit`` runs its Python body *once per trace*,
+not once per step.  Host-state reads inside it are frozen into the
+compiled program (wall-clock, mutable module globals — exactly the
+per-trace backend sniffing PR 4 had to remove from the kernel layer) or
+force a device→host sync that breaks async dispatch (``.item()``), or
+simply never fire again (``print``).  All of these look correct on the
+first step and silently diverge later.
+
+A function counts as *traced* when it (or any enclosing function) is
+
+* decorated with ``jax.jit`` / ``jax.pmap`` (bare, ``@jax.jit(...)`` or
+  via ``functools.partial(jax.jit, ...)``), or
+* passed by name as the first argument to a ``jax.jit(...)`` /
+  ``jax.pmap(...)`` call anywhere in the same file.
+
+Inside traced bodies (nested defs and lambdas included) the rule flags
+``time.*`` clock calls, ``print(...)``, ``.item()``, ``global`` /
+``nonlocal`` mutation, and reads of module-level *rebound* globals —
+a global assigned more than once, or assigned under a ``global``
+declaration, is mutable state whose value the trace captures silently.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+from repro.analysis.rules.common import (call_canonical, dotted, import_map,
+                                         parent_map)
+
+_TRACERS = {"jax.jit", "jax.pmap"}
+_CLOCKS = {"time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+           "time.perf_counter", "time.perf_counter_ns"}
+_PARTIAL = {"functools.partial", "partial"}
+
+
+def _decorator_traces(dec: ast.AST, imports) -> bool:
+    """True when a decorator expression makes the function traced."""
+    if dotted(dec) is not None:
+        c = dotted(dec)
+        head, _, rest = c.partition(".")
+        c = f"{imports.get(head, head)}.{rest}" if rest else imports.get(head, head)
+        return c in _TRACERS or c == "jit"
+    if isinstance(dec, ast.Call):
+        c = call_canonical(dec, imports)
+        if c in _TRACERS:                         # @jax.jit(static_argnums=..)
+            return True
+        if c in _PARTIAL and dec.args:            # @partial(jax.jit, ...)
+            return _decorator_traces(dec.args[0], imports)
+    return False
+
+
+def _jitted_names(tree: ast.Module, imports) -> set[str]:
+    """Function names passed as the first argument of a jit/pmap call
+    somewhere in this file (``jitted = jax.jit(fn, ...)``)."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and call_canonical(node, imports) in _TRACERS:
+            if node.args and isinstance(node.args[0], ast.Name):
+                out.add(node.args[0].id)
+    return out
+
+
+def _rebound_globals(tree: ast.Module) -> set[str]:
+    """Module-level names that are *mutable state*: assigned more than
+    once at module scope, or assigned anywhere under a ``global``
+    declaration.  Single-assignment module constants don't count."""
+    counts: dict[str, int] = {}
+    for stmt in tree.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = [t for t in stmt.targets if isinstance(t, ast.Name)]
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)) \
+                and isinstance(stmt.target, ast.Name):
+            targets = [stmt.target]
+        for t in targets:
+            counts[t.id] = counts.get(t.id, 0) + 1
+    rebound = {n for n, c in counts.items() if c > 1}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            rebound.update(n for n in node.names if n in counts)
+    return rebound
+
+
+class TraceSafetyRule(Rule):
+    code = "SF002"
+    name = "trace-safety"
+    summary = ("no wall-clock, print, .item() host syncs, or mutable-"
+               "global capture inside jit/pmap-traced functions")
+
+    def check_file(self, file, project):
+        imports = import_map(file.tree)
+        jitted = _jitted_names(file.tree, imports)
+        rebound = _rebound_globals(file.tree)
+        parents = parent_map(file.tree)
+
+        traced_roots = []
+        for node in ast.walk(file.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if (node.name in jitted
+                        or any(_decorator_traces(d, imports)
+                               for d in node.decorator_list)):
+                    traced_roots.append(node)
+
+        seen: set[ast.AST] = set()
+        for root in traced_roots:
+            for node in ast.walk(root):
+                if node in seen:
+                    continue
+                seen.add(node)
+                yield from self._check_node(file, node, root, imports,
+                                            rebound, parents)
+
+    def _check_node(self, file, node, root, imports, rebound, parents):
+        if isinstance(node, ast.Call):
+            c = call_canonical(node, imports)
+            if c in _CLOCKS:
+                yield self.diag(
+                    file, node,
+                    f"{c}() inside a traced function runs once at trace "
+                    "time and is constant-folded into the program — move "
+                    "wall-clock reads to the host loop")
+            elif isinstance(node.func, ast.Name) and node.func.id == "print":
+                yield self.diag(
+                    file, node,
+                    "print() inside a traced function fires only at trace "
+                    "time — use jax.debug.print or log on the host")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                yield self.diag(
+                    file, node,
+                    ".item() inside a traced function forces a device->"
+                    "host sync and fails under jit — keep values as arrays")
+        elif isinstance(node, ast.Global):
+            yield self.diag(
+                file, node,
+                "`global` mutation inside a traced function runs at trace "
+                "time only — thread state through arguments instead")
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id in rebound:
+            if not self._is_local(node, root, parents):
+                yield self.diag(
+                    file, node,
+                    f"traced function reads mutable module global "
+                    f"'{node.id}' — its value is captured at trace time "
+                    "and later rebinds are silently ignored (resolve it "
+                    "before tracing and close over the resolved value)")
+
+    @staticmethod
+    def _is_local(name: ast.Name, root, parents) -> bool:
+        """True when ``name`` is bound locally in any function scope
+        between the use and the traced root (param or assignment)."""
+        fn = name
+        while fn is not None and fn is not parents.get(root):
+            fn = parents.get(fn)
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+                args = fn.args
+                params = [a.arg for a in (args.posonlyargs + args.args
+                                          + args.kwonlyargs)]
+                if args.vararg:
+                    params.append(args.vararg.arg)
+                if args.kwarg:
+                    params.append(args.kwarg.arg)
+                if name.id in params:
+                    return True
+                if not isinstance(fn, ast.Lambda):
+                    for sub in ast.walk(fn):
+                        if isinstance(sub, (ast.Assign, ast.AugAssign,
+                                            ast.AnnAssign)):
+                            tgts = (sub.targets
+                                    if isinstance(sub, ast.Assign)
+                                    else [sub.target])
+                            for t in tgts:
+                                if isinstance(t, ast.Name) \
+                                        and t.id == name.id:
+                                    return True
+                        elif isinstance(sub, (ast.For, ast.AsyncFor)) \
+                                and isinstance(sub.target, ast.Name) \
+                                and sub.target.id == name.id:
+                            return True
+        return False

@@ -1,0 +1,190 @@
+"""SF003 — deterministic iteration order.
+
+Bitwise consensus and bitwise resume (PRs 2–3) both hinge on float
+summation happening in *the same order on every client and every run*:
+flood frontier order determines payload order determines the order of
+rank-1 axpys into the weights.  Iterating a ``set`` (or a filesystem
+listing) hands that order to hash-table internals / the OS instead of
+the protocol.  Python set iteration is *not* insertion-ordered, and for
+str-keyed sets it changes across processes with hash randomization —
+"it happened to agree in this run" is not evidence.
+
+Flags iteration over *set-origin* expressions — set literals/
+comprehensions, ``set()``/``frozenset()`` calls, set-algebra operators
+(``| & - ^``) and methods (``union`` …) over them, and names assigned
+from any of those in the same scope — when the set feeds a ``for`` loop,
+a comprehension, or an order-sensitive consumer (``list``, ``tuple``,
+``enumerate``, ``sum``, ``json.dump``, ``np.asarray``, ``.join``).
+Order-insensitive consumers (``len``/``any``/``all``/``max``/``min``/
+membership/more set algebra) are fine; ``sorted(...)`` is the blessed
+fix and silences the rule.  Unsorted ``os.listdir``/``glob.glob``/
+``Path.iterdir`` iteration is flagged for the same reason (checkpoint
+discovery order must not depend on the filesystem).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+from repro.analysis.rules.common import call_canonical, import_map
+
+_SET_METHODS = {"union", "intersection", "difference",
+                "symmetric_difference", "copy"}
+_SET_OPS = (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+#: Calls whose result enumerates the filesystem in OS-defined order.
+_FS_LISTING = {"os.listdir", "os.scandir", "glob.glob", "glob.iglob"}
+#: Order-sensitive consumers: passing an unordered iterable here bakes
+#: hash-table order into data, floats, or serialized output.
+_ORDER_SENSITIVE_CALLS = {"list", "tuple", "enumerate", "sum", "iter",
+                          "numpy.asarray", "numpy.array", "numpy.stack",
+                          "numpy.concatenate", "json.dump", "json.dumps",
+                          "jax.numpy.asarray", "jax.numpy.array"}
+
+
+class _Scope:
+    """Set-origin name tracking for one function (or the module body)."""
+
+    def __init__(self):
+        self.set_names: set[str] = set()
+
+
+class IterationOrderRule(Rule):
+    code = "SF003"
+    name = "iteration-order"
+    summary = ("no iteration over sets or filesystem listings feeding "
+               "order-sensitive work — wrap in sorted()")
+
+    def check_file(self, file, project):
+        imports = import_map(file.tree)
+        # module scope first: its set-origin names seed every function
+        # scope (a function iterating a module-level set is the same bug)
+        module_sets = yield from self._check_scope(file, file.tree, True,
+                                                   imports, set())
+        for node in ast.walk(file.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_scope(file, node, False, imports,
+                                             module_sets)
+
+    # -- scope walk -----------------------------------------------------------
+
+    def _scope_body(self, scope_node, is_module):
+        """Nodes belonging to this scope (module: skip function bodies —
+        they are their own scopes; functions: include nested defs so
+        closures over an outer set still resolve)."""
+        if not is_module:
+            yield from ast.walk(scope_node)
+            return
+        stack = list(ast.iter_child_nodes(scope_node))
+        while stack:
+            node = stack.pop()
+            yield node
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                stack.extend(ast.iter_child_nodes(node))
+
+    def _check_scope(self, file, scope_node, is_module, imports,
+                     outer_sets: set[str]):
+        scope = _Scope()
+        scope.set_names |= outer_sets
+        if not is_module:       # params shadow same-named module globals
+            a = scope_node.args
+            params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+            scope.set_names -= params
+        nodes = list(self._scope_body(scope_node, is_module))
+        # pass 1: which names are set-origin in this scope?
+        changed = True
+        while changed:                       # chains: a = set(); b = a | c
+            changed = False
+            for node in nodes:
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets = [t for t in node.targets
+                               if isinstance(t, ast.Name)]
+                    value = node.value
+                elif isinstance(node, ast.AnnAssign) \
+                        and isinstance(node.target, ast.Name):
+                    targets, value = [node.target], node.value
+                    ann = ast.unparse(node.annotation).lower()
+                    if ann.startswith(("set", "frozenset", "typing.set",
+                                       "typing.frozenset")):
+                        value = value or ast.Set(elts=[])
+                        if node.target.id not in scope.set_names:
+                            scope.set_names.add(node.target.id)
+                            changed = True
+                elif isinstance(node, ast.AugAssign) \
+                        and isinstance(node.target, ast.Name):
+                    continue                 # |= keeps origin, adds nothing
+                else:
+                    continue
+                if value is not None and self._is_set_expr(value, scope,
+                                                           imports):
+                    for t in targets:
+                        if t.id not in scope.set_names:
+                            scope.set_names.add(t.id)
+                            changed = True
+        # pass 2: where do set-origin / fs-listing values leak order?
+        for node in nodes:
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                yield from self._check_iter(file, node.iter, scope, imports,
+                                            "for-loop")
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    kind = ("set-comprehension" if isinstance(node, ast.SetComp)
+                            else "comprehension")
+                    yield from self._check_iter(file, gen.iter, scope,
+                                                imports, kind)
+            elif isinstance(node, ast.Call):
+                c = call_canonical(node, imports)
+                if c in _ORDER_SENSITIVE_CALLS and node.args:
+                    yield from self._check_iter(file, node.args[0], scope,
+                                                imports, f"{c}()")
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "join" and node.args:
+                    yield from self._check_iter(file, node.args[0], scope,
+                                                imports, "str.join()")
+        return scope.set_names
+
+    def _check_iter(self, file, expr, scope, imports, context):
+        if context in ("set-comprehension",):
+            return  # building another set keeps the value unordered — fine
+        if self._is_set_expr(expr, scope, imports):
+            yield self.diag(
+                file, expr,
+                f"iteration over a set in {context}: set order is "
+                "hash-table order, not protocol order — any float "
+                "accumulation or serialization downstream becomes "
+                "run-dependent; wrap in sorted(...)")
+        elif self._is_fs_listing(expr, imports):
+            yield self.diag(
+                file, expr,
+                f"unsorted filesystem listing in {context}: the OS "
+                "defines this order — wrap in sorted(...)")
+
+    # -- expression classification -------------------------------------------
+
+    def _is_set_expr(self, expr, scope: _Scope, imports) -> bool:
+        if isinstance(expr, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(expr, ast.Name):
+            return expr.id in scope.set_names
+        if isinstance(expr, ast.Call):
+            c = call_canonical(expr, imports)
+            if c in ("set", "frozenset"):
+                return True
+            if isinstance(expr.func, ast.Attribute) \
+                    and expr.func.attr in _SET_METHODS:
+                return self._is_set_expr(expr.func.value, scope, imports)
+            return False
+        if isinstance(expr, ast.BinOp) and isinstance(expr.op, _SET_OPS):
+            return (self._is_set_expr(expr.left, scope, imports)
+                    or self._is_set_expr(expr.right, scope, imports))
+        return False
+
+    def _is_fs_listing(self, expr, imports) -> bool:
+        if not isinstance(expr, ast.Call):
+            return False
+        c = call_canonical(expr, imports)
+        if c in _FS_LISTING:
+            return True
+        return (isinstance(expr.func, ast.Attribute)
+                and expr.func.attr == "iterdir")

@@ -1,0 +1,80 @@
+"""SF004 — config-field consumption.
+
+PR 3's post-mortem: four DTrainConfig knobs (``momentum``,
+``choco_density``, …) were silently ignored by most methods for months
+— a run *looked* configured but trained something else.  The runtime
+fix was ``validate_config``'s per-method rejection table; this rule is
+the static half: **every field on the user-facing config dataclasses
+must be read somewhere in src/**, as an attribute (``cfg.field``) or by
+name in the rejection table / a ``getattr`` string.  A knob nobody
+reads can never change behavior, so either it is dead or — worse — its
+consumer was refactored away and runs are quietly misconfigured.
+
+Cross-module pass: collect annotated fields of the config classes, then
+scan every file under ``src/`` for attribute loads and string constants
+naming them.  Underscore-prefixed names and ``ClassVar`` annotations
+are exempt.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+
+#: The user-facing config surfaces (DESIGN.md §4/§3): the classes whose
+#: fields are promises to the user that a knob does something.
+CONFIG_CLASSES = ("DTrainConfig", "SubCGEConfig", "PodConfig")
+
+
+class ConfigFieldsRule(Rule):
+    code = "SF004"
+    name = "config-field-consumption"
+    summary = ("every DTrainConfig/SubCGEConfig/PodConfig field must be "
+               "read somewhere in src/ (attribute or rejection-table name)")
+
+    def check_project(self, project):
+        # fields: (class, field, file, node) from class bodies under src/
+        fields = []
+        for cls_name in CONFIG_CLASSES:
+            for f, node in project.class_index().get(cls_name, ()):
+                if f.top != "src":
+                    continue
+                for stmt in node.body:
+                    if not (isinstance(stmt, ast.AnnAssign)
+                            and isinstance(stmt.target, ast.Name)):
+                        continue
+                    name = stmt.target.id
+                    ann = ast.unparse(stmt.annotation)
+                    if name.startswith("_") or "ClassVar" in ann:
+                        continue
+                    fields.append((cls_name, name, f, stmt))
+        if not fields:
+            return
+
+        # consumption scan: every attribute LOAD and every string constant
+        # in src/.  Attribute stores/keywords are writes, not reads.
+        attr_reads: set[str] = set()
+        str_consts: set[str] = set()
+        for f in project.parsed():
+            if f.top != "src":
+                continue
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.Attribute) \
+                        and isinstance(node.ctx, ast.Load):
+                    attr_reads.add(node.attr)
+                elif isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str) \
+                        and node.value.isidentifier():
+                    # exact-identifier strings only: "momentum" in the
+                    # rejection table counts, prose mentions in docstrings
+                    # don't (they are never a single identifier)
+                    str_consts.add(node.value)
+
+        for cls_name, name, f, stmt in fields:
+            if name in attr_reads or name in str_consts:
+                continue
+            yield self.diag(
+                f, stmt,
+                f"{cls_name}.{name} is never read in src/ — a knob nobody "
+                "consumes silently does nothing; wire it up, name it in "
+                "validate_config's rejection table, or delete it")

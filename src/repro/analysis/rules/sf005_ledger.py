@@ -1,0 +1,97 @@
+"""SF005 — ledger conservation.
+
+The paper's headline metric is *bytes per edge*; PR 3 moved ALL byte
+accounting into the Transport layer so that no method refactor can
+drift the cost model.  The invariant: anything that enqueues onto a
+flood/gossip network — injections, flood rounds, anti-entropy drains,
+choco rounds, mixing — is reachable from ``core/``/``dtrain/`` code
+only through a Transport method, because Transports own the
+``CommLedger`` that charges for it.  A direct ``net.inject(...)`` from
+a method or the trainer would move bytes nobody ever counts.
+
+Cross-module pass: the class hierarchy identifies Transport classes
+(transitive subclasses of ``TransportBase``); enqueue-primitive calls
+in ``src/repro/core`` / ``src/repro/dtrain`` outside the substrate
+modules (``core/flood.py``, ``core/gossip.py`` — where the primitives
+are *defined* and charge the ledger themselves) must sit lexically
+inside a Transport class body.  Tests/benchmarks/examples drive
+networks directly on purpose and are out of scope.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+from repro.analysis.rules.common import call_canonical, import_map, parent_map
+
+#: Method names that enqueue onto (or drain from) a network substrate.
+#: ``round`` is deliberately absent: ``ndarray.round()`` would swamp the
+#: signal; ``rounds*`` and ``inject`` cover every real enqueue path.
+ENQUEUE_METHODS = {"inject", "rounds", "rounds_arrays", "rounds_padded",
+                   "full_flood", "drain_catchup", "drain_catchup_arrays"}
+
+#: Module-level functions with the same property (gossip exchange).
+ENQUEUE_FUNCTIONS = {"repro.core.gossip.choco_round", "repro.core.gossip.mix"}
+
+#: Files allowed to touch the primitives freely: the substrate itself
+#: (its engines charge their own ledger as part of the protocol).
+SUBSTRATE = {("core", "flood.py"), ("core", "gossip.py")}
+
+TRANSPORT_BASE = "TransportBase"
+
+
+class LedgerConservationRule(Rule):
+    code = "SF005"
+    name = "ledger-conservation"
+    summary = ("network enqueues in core/ and dtrain/ only inside "
+               "Transport classes (the CommLedger owners)")
+
+    def _in_scope(self, file) -> bool:
+        if file.top != "src":
+            return False
+        if not (file.in_dir("core") or file.in_dir("dtrain")):
+            return False
+        return tuple(file.parts[-2:]) not in SUBSTRATE
+
+    def check_project(self, project):
+        transports = project.subclasses_of(TRANSPORT_BASE)
+        for f in project.parsed():
+            if not self._in_scope(f):
+                continue
+            imports = import_map(f.tree)
+            parents = parent_map(f.tree)
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                label = self._enqueue_label(node, imports)
+                if label is None:
+                    continue
+                cls = self._enclosing_class(node, parents)
+                if cls is not None and cls.name in transports:
+                    continue
+                where = (f"class {cls.name}" if cls is not None
+                         else "module scope")
+                yield self.diag(
+                    f, node,
+                    f"network enqueue '{label}' from {where}: only "
+                    "Transport subclasses (which own the CommLedger) may "
+                    "enqueue onto a flood/gossip network — route this "
+                    "through a Transport method so the bytes are charged")
+
+    def _enqueue_label(self, node: ast.Call, imports) -> str | None:
+        c = call_canonical(node, imports)
+        if c in ENQUEUE_FUNCTIONS:
+            return c
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ENQUEUE_METHODS:
+            return f".{node.func.attr}()"
+        return None
+
+    @staticmethod
+    def _enclosing_class(node, parents) -> ast.ClassDef | None:
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur
+            cur = parents.get(cur)
+        return None

@@ -1,0 +1,111 @@
+"""SF006 — kernel dispatch discipline.
+
+PR 4's contract: every hot-path op goes through ``repro.kernels.ops``,
+the ONE place that resolves the ``kernel_backend`` knob, caches the
+``auto`` decision, and keeps the jnp oracle bitwise-pinned.  A direct
+``pl.pallas_call`` or ``kernels.ref.*`` call site anywhere else
+re-opens exactly the bugs that PR fixed — per-trace backend sniffing,
+divergent ``_tile`` copies, silently-unused knobs.
+
+Outside ``src/repro/kernels/`` the rule flags:
+
+* any ``pallas_call`` invocation or ``jax.experimental.pallas`` import;
+* any import binding a ``repro.kernels`` submodule other than ``ops``
+  (``ref``, ``subcge_apply``, ``rank1_matmul``, ``selective_scan``);
+* attribute chains reaching ``repro.kernels.ref`` through the package.
+
+Oracle-parity tests and benchmarks legitimately need the raw reference
+kernels — they suppress at the import line with a justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+from repro.analysis.rules.common import canonical, import_map
+
+KERNELS_PKG = "repro.kernels"
+ALLOWED_SUBMODULE = "ops"
+
+
+class KernelDispatchRule(Rule):
+    code = "SF006"
+    name = "kernel-dispatch"
+    summary = ("no pallas_call or repro.kernels.<non-ops> call sites "
+               "outside src/repro/kernels — dispatch through ops.*")
+
+    def check_file(self, file, project):
+        if file.in_dir("kernels"):
+            return
+        imports = import_map(file.tree)
+        seen_attr: set[tuple[int, int]] = set()
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "pallas_call" \
+                        or isinstance(node.func, ast.Name) \
+                        and node.func.id == "pallas_call":
+                    yield self.diag(
+                        file, node,
+                        "pallas_call outside repro/kernels: raw kernel "
+                        "invocations bypass backend resolution and the "
+                        "jnp oracle — add the op to kernels/ops.py and "
+                        "dispatch through it")
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith("jax.experimental.pallas") \
+                            or self._bad_kernels_module(a.name):
+                        yield self.diag(
+                            file, node,
+                            f"import of '{a.name}' outside repro/kernels "
+                            "— only kernels/ops.py may touch kernel "
+                            "internals; dispatch through ops.*")
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module.startswith("jax.experimental.pallas"):
+                    yield self.diag(
+                        file, node,
+                        f"import of '{node.module}' outside repro/kernels "
+                        "— only kernels/ops.py may touch kernel internals; "
+                        "dispatch through ops.*")
+                elif self._bad_kernels_module(node.module):
+                    yield self.diag(
+                        file, node,
+                        f"import from '{node.module}' outside repro/"
+                        "kernels — use the ops.* dispatch layer")
+                elif node.module == KERNELS_PKG:
+                    for a in node.names:
+                        if a.name != ALLOWED_SUBMODULE:
+                            yield self.diag(
+                                file, node,
+                                f"import of repro.kernels.{a.name} outside "
+                                "repro/kernels — only 'ops' is public; "
+                                "the oracles/kernels behind it are "
+                                "dispatch-layer internals")
+            elif isinstance(node, ast.Attribute):
+                c = canonical(node, imports)
+                if c is not None and c.startswith(KERNELS_PKG + ".") \
+                        and not c.startswith(
+                            f"{KERNELS_PKG}.{ALLOWED_SUBMODULE}"):
+                    # an alias bound straight to a bad submodule was
+                    # already flagged at its import line — one finding,
+                    # one justified suppression per access path
+                    head = c.split(".")
+                    via_alias = any(
+                        self._bad_kernels_module(target) or target ==
+                        f"{KERNELS_PKG}.{ALLOWED_SUBMODULE}"
+                        for target in imports.values()
+                        if c.startswith(target + "."))
+                    pos = (node.lineno, node.col_offset)
+                    if not via_alias and head[:2] == ["repro", "kernels"] \
+                            and pos not in seen_attr:
+                        seen_attr.add(pos)   # a.b.c walks nested Attributes
+                        #                      at the same position — one diag
+                        yield self.diag(
+                            file, node,
+                            f"reference to '{c}' outside repro/kernels — "
+                            "dispatch through ops.*")
+
+    @staticmethod
+    def _bad_kernels_module(mod: str) -> bool:
+        return (mod.startswith(KERNELS_PKG + ".")
+                and mod != f"{KERNELS_PKG}.{ALLOWED_SUBMODULE}")

@@ -11,7 +11,6 @@ is a repeating *period* of layer slots that is lax.scan'ed over its ``reps``
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 #: Legal values of the ``kernel_backend`` knob (SubCGEConfig / DTrainConfig /
 #: PodConfig).  ``auto`` resolves once per process — Pallas on TPU, the

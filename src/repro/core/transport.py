@@ -257,7 +257,14 @@ class GossipSRTransport(TransportBase):
         new_hist = []
         for i in range(n):
             h = {}
-            for uid in all_uids:
+            # uid order decides delta-replay float order downstream.  uids
+            # are (client, step) int tuples: CPython hashes them unsalted,
+            # so iteration order is identical on every run/machine given
+            # the same insertion history — and the golden-parity suite pins
+            # exactly this order; sorted() would diverge from the frozen
+            # monolith oracle bit-for-bit.
+            for uid in all_uids:  # sfcheck: noqa[SF003] -- int-tuple uids hash unsalted; order is deterministic and bitwise-pinned by test_golden_parity
+
                 cbar = sum(W[i, j] * hist[j].get(uid, [0, 0, 0.0])[2]
                            for j in range(n) if W[i, j] > 0)
                 ref = next(hist[j][uid] for j in range(n) if uid in hist[j])

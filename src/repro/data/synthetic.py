@@ -16,9 +16,7 @@ setting) or Dirichlet non-IID for heterogeneity studies.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -48,7 +48,10 @@ def merge(params: Any, lora: Any, alpha: float = 16.0) -> Any:
     """W_eff = W + (α/r)·A@B for every adapted leaf."""
     lora_flat = plib.flatten_paths(lora)
     adapted: dict[str, jax.Array] = {}
-    for path in {p.rsplit("/", 1)[0] for p in lora_flat}:
+    # sorted: path strings hash with per-process salt, so bare set order
+    # would vary across runs (values are keyed lookups either way, but
+    # deterministic build order keeps the tree reproducible bit-for-bit)
+    for path in sorted({p.rsplit("/", 1)[0] for p in lora_flat}):
         A = lora_flat[path + "/A"]
         B = lora_flat[path + "/B"]
         r = A.shape[-1]

@@ -102,6 +102,8 @@ class Trainer:
         start = 0
         if cfg.resume_from:
             state, start = self._resume(state, curves)
+        # wall-clock is reporting-only (wall_s/step_wall_s); every RNG in
+        # the run derives from cfg.base_seed — SF001 bans clock-seeding
         t0 = time.time()
 
         for t in range(start, cfg.steps):

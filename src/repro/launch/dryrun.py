@@ -93,7 +93,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     resident = sum(_per_device(a, s) for a, s in zip(example, in_sh))
 
-    t0 = time.time()
+    t0 = time.time()   # lower/compile timing report only; never seeds anything
     with mesh:
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
         lowered = jitted.lower(*example)

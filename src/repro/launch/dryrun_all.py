@@ -33,7 +33,7 @@ def run_one(arch: str, shape: str, multipod: bool, out_path: str,
         cmd.append("--multipod")
     env = dict(os.environ)
     env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
-    t0 = time.time()
+    t0 = time.time()   # wall_s report field only; never seeds anything
     try:
         p = subprocess.run(cmd, capture_output=True, text=True,
                            timeout=timeout, env=env)

@@ -23,7 +23,6 @@ for jax.jit(...).lower(...).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -37,7 +36,6 @@ from repro.launch import mesh as meshlib
 from repro.models import params as plib
 from repro.models import transformer as tf
 from repro.models.perturb import nest_subspace, sample_pert
-from repro.topology import graphs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,7 +258,6 @@ def build_dsgd_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     params_abs = plib.abstract_params(spec, pod.param_dtype)
     params_sh = plib.tree_shardings(spec, mesh, cfg.sharding_policy)
     batch_abs, batch_sh = train_inputs(cfg, shape, mesh, pod)
-    n = pod.n_clients or meshlib.data_extent(mesh)
 
     def train_step(params, batch, step):
         # per-client gradient on the client's shard (vmapped like SeedFlood)

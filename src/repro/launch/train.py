@@ -14,7 +14,6 @@ Checkpoints (params + step + seed — ZO has no optimizer state) land in
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import time
 
@@ -74,6 +73,8 @@ def main(argv=None) -> int:
     with mesh:
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
         per_client = args.batch // args.n_clients
+        # throughput timing only: data + perturbations key off (base_seed,
+        # client, step) so a re-run is bit-identical — never clock-seed here
         t0 = time.time()
         for step in range(args.steps):
             toks = np.stack([

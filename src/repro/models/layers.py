@@ -16,12 +16,11 @@ MLA slots own the *compressed* cache ``{"ckv": (B,C,kv_lora),
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AttnCfg, LayerCfg, MambaCfg, MoECfg
+from repro.configs.base import AttnCfg, MambaCfg, MoECfg
 from repro.models.perturb import Bundle
 
 _NEG_INF = -1e30

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import seeds as seedlib
 from repro.core import subcge
-from repro.core.subcge import IJ, UV, LeafMeta, SubCGEConfig
+from repro.core.subcge import UV, LeafMeta, SubCGEConfig
 from repro.kernels import ops as kops
 from repro.models import params as plib
 

@@ -17,7 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, Group, LayerCfg
+from repro.configs.base import ArchConfig, LayerCfg
 from repro.models import layers as L
 from repro.models import params as plib
 from repro.models.params import LeafSpec, matrix, vector

@@ -24,8 +24,6 @@ crossing links, which is what the ICI term wants.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
 
 from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
@@ -91,7 +89,6 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
     total = 0.0
     raw = 0.0
     count = 0
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _COLLECTIVE_RE.match(line)
         if not m:

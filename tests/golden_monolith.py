@@ -496,7 +496,7 @@ def run_gossip_sr(cfg: DTrainConfig) -> RunResult:
             new_hist = []
             for i in range(n):
                 h = {}
-                for uid in all_uids:
+                for uid in all_uids:  # sfcheck: noqa[SF003] -- FROZEN pre-refactor oracle; int-tuple uid order is deterministic and must stay byte-identical to the live transport
                     cbar = sum(W[i, j] * hist[j].get(uid, [0, 0, 0.0])[2]
                                for j in range(n) if W[i, j] > 0)
                     ref = next(hist[j][uid] for j in range(n) if uid in hist[j])

@@ -7,7 +7,7 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core import flood
-from repro.core.messages import Message, MESSAGE_BYTES
+from repro.core.messages import Message
 from repro.topology import graphs
 
 

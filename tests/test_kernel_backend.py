@@ -7,8 +7,6 @@ numerically-different-but-correct implementations drift to ~1e-5 within a
 few steps; the run-level comparisons use short horizons and fp32-scale
 tolerances, not bitwise equality (which only the jnp path guarantees).
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

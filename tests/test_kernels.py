@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import KERNEL_BACKENDS
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref  # sfcheck: noqa[SF006] -- this suite IS the oracle-parity gate; it needs the raw ref kernels
 
 
 # ---------------------------------------------------------------------------
@@ -53,7 +53,7 @@ def test_tile_properties(dim, target):
 
 
 def test_tile_shared_by_all_kernel_modules():
-    from repro.kernels import rank1_matmul, selective_scan, subcge_apply
+    from repro.kernels import rank1_matmul, selective_scan, subcge_apply  # sfcheck: noqa[SF006] -- asserts the kernel modules share ops._tile
     assert subcge_apply._tile is ops._tile
     assert rank1_matmul._tile is ops._tile
     assert selective_scan._tile is ops._tile

@@ -15,7 +15,6 @@ from repro.configs import archs
 from repro.configs.base import InputShape
 from repro.launch import steps as steplib
 from repro.launch.mesh import make_host_mesh
-from repro.models import transformer as tf
 
 
 SMALL = InputShape("small", seq=32, global_batch=4, kind="train")

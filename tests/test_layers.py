@@ -2,10 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
-from repro.configs.base import AttnCfg, LayerCfg, MambaCfg, MoECfg
+from repro.configs.base import MoECfg
 from repro.models import layers as L
 from repro.models.perturb import Bundle
 

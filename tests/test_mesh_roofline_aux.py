@@ -4,7 +4,6 @@ import glob
 import json
 import os
 
-import jax
 import pytest
 
 from repro.configs import archs
@@ -36,7 +35,8 @@ def test_roofline_constants_are_v5e_class():
 def test_dryrun_records_schema_and_coverage():
     """The recorded baseline must cover all 10 archs × 4 shapes × 2 meshes
     with the §Roofline fields present."""
-    recs = [json.load(open(f)) for f in glob.glob(os.path.join(RESULTS, "*.json"))]
+    recs = [json.load(open(f))
+            for f in sorted(glob.glob(os.path.join(RESULTS, "*.json")))]
     ok = [r for r in recs if "error" not in r]
     combos = {(r["arch"], r["shape"], r["mesh"] if isinstance(r["mesh"], str)
                else "x".join(map(str, r["mesh"]))) for r in ok}

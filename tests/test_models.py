@@ -2,8 +2,6 @@
 reduced same-family variant, runs a forward + one ZO train-ish step on CPU
 with shape and NaN assertions; plus prefill+decode == full-forward
 consistency for every family's cache machinery."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

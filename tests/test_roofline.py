@@ -8,7 +8,7 @@ import pytest
 from repro.roofline import analysis as ra
 from repro.roofline import cost_model
 from repro.configs import archs
-from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.configs.base import INPUT_SHAPES
 
 
 def test_shape_bytes_parser():

@@ -1,0 +1,393 @@
+"""Per-rule fixtures for sfcheck (`repro.analysis`): every SF0xx rule
+has at least one minimal violating snippet (the rule must fire) and one
+clean snippet (the rule must stay quiet), plus suppression-comment
+semantics (SF000 justification hygiene).
+
+These run on in-memory Projects — no filesystem, no jit, fast."""
+from repro.analysis.engine import (PARSE_ERROR_CODE, SUPPRESSION_CODE,
+                                   Project, run_rules)
+
+
+def diags(sources, rel="src/repro/core/mod.py", select=None):
+    if isinstance(sources, str):
+        sources = {rel: sources}
+    return run_rules(Project.from_sources(sources), select=select)
+
+
+def codes(sources, rel="src/repro/core/mod.py", select=None):
+    return sorted({d.code for d in diags(sources, rel, select)})
+
+
+# ---------------------------------------------------------------------------
+# SF001 seed hygiene
+# ---------------------------------------------------------------------------
+
+def test_sf001_unseeded_default_rng_fires():
+    assert codes("import numpy as np\nrng = np.random.default_rng()\n") \
+        == ["SF001"]
+
+
+def test_sf001_global_numpy_rng_fires():
+    assert codes("import numpy as np\nnp.random.seed(0)\n") == ["SF001"]
+    assert codes("import numpy as np\nx = np.random.rand(3)\n") == ["SF001"]
+
+
+def test_sf001_stdlib_random_fires():
+    assert codes("import random\nx = random.random()\n") == ["SF001"]
+    assert codes("import random\nrandom.shuffle([1, 2])\n") == ["SF001"]
+
+
+def test_sf001_clock_derived_seed_fires():
+    src = ("import time\nimport numpy as np\n"
+           "rng = np.random.default_rng(int(time.time()))\n")
+    assert codes(src) == ["SF001"]
+    assert codes("import time\nbase_seed = int(time.time())\n") == ["SF001"]
+    src = ("import time\n"
+           "def f(run):\n    run(seed=int(time.time_ns()))\n")
+    assert codes(src) == ["SF001"]
+
+
+def test_sf001_seeded_rng_is_clean():
+    src = ("import numpy as np\n"
+           "rng = np.random.default_rng(42)\n"
+           "x = rng.normal(size=3)\n"
+           "y = rng.integers(0, 10)\n")
+    assert codes(src) == []
+
+
+def test_sf001_jax_counter_rng_is_clean():
+    src = ("import jax\n"
+           "def f(seed, step):\n"
+           "    return jax.random.fold_in(jax.random.PRNGKey(seed), step)\n")
+    assert codes(src) == []
+
+
+def test_sf001_wallclock_logging_is_clean():
+    # wall-clock *logging* derives no seed — never flagged, anywhere
+    src = "import time\nt0 = time.time()\nwall = time.time() - t0\n"
+    assert codes(src) == []
+
+
+def test_sf001_launch_and_benchmarks_may_clock_label():
+    src = ("import time\nimport numpy as np\n"
+           "rng = np.random.default_rng(int(time.time()))\n")
+    assert codes(src, rel="src/repro/launch/sweep.py") == []
+    assert codes(src, rel="benchmarks/bench_x.py") == []
+    # ...but global RNG state stays banned even there
+    bad = "import numpy as np\nnp.random.seed(0)\n"
+    assert codes(bad, rel="src/repro/launch/sweep.py") == ["SF001"]
+
+
+# ---------------------------------------------------------------------------
+# SF002 trace safety
+# ---------------------------------------------------------------------------
+
+def test_sf002_clock_in_jit_fires():
+    src = ("import jax\nimport time\n"
+           "@jax.jit\ndef f(x):\n    return x + time.time()\n")
+    assert codes(src) == ["SF002"]
+
+
+def test_sf002_print_and_item_in_jit_fire():
+    src = ("import jax\n"
+           "@jax.jit\ndef f(x):\n    print(x)\n    return x\n")
+    assert codes(src) == ["SF002"]
+    src = ("import jax\n"
+           "@jax.jit\ndef f(x):\n    return float(x.sum().item())\n")
+    assert codes(src) == ["SF002"]
+
+
+def test_sf002_partial_jit_decorator_and_jit_call_fire():
+    src = ("import functools\nimport jax\nimport time\n"
+           "@functools.partial(jax.jit, donate_argnums=(0,))\n"
+           "def f(x):\n    return x * time.time()\n")
+    assert codes(src) == ["SF002"]
+    src = ("import jax\nimport time\n"
+           "def f(x):\n    return x * time.time()\n"
+           "g = jax.jit(f, static_argnums=())\n")
+    assert codes(src) == ["SF002"]
+
+
+def test_sf002_mutable_global_capture_fires():
+    src = ("import jax\n"
+           '_backend = "auto"\n'
+           "def set_backend(b):\n"
+           "    global _backend\n"
+           "    _backend = b\n"
+           "@jax.jit\ndef f(x):\n"
+           '    return x if _backend == "jnp" else -x\n')
+    assert codes(src) == ["SF002"]
+
+
+def test_sf002_global_statement_in_jit_fires():
+    src = ("import jax\n_n = 0\n_n = 1\n"
+           "@jax.jit\ndef f(x):\n    global _n\n    _n = 2\n    return x\n")
+    assert "SF002" in codes(src)
+
+
+def test_sf002_host_loop_clock_is_clean():
+    src = ("import jax\nimport time\n"
+           "@jax.jit\ndef step(x):\n    return x + 1\n"
+           "def run(x):\n    t0 = time.time()\n"
+           "    x = step(x)\n    return x, time.time() - t0\n")
+    assert codes(src) == []
+
+
+def test_sf002_module_constant_read_is_clean():
+    # single-assignment module dict is a constant table, not mutable state
+    src = ("import jax\n"
+           'ACTS = {"a": 1}\n'
+           "@jax.jit\ndef f(x):\n"
+           '    return x + ACTS["a"]\n')
+    assert codes(src) == []
+
+
+def test_sf002_shadowing_param_is_clean():
+    src = ("import jax\n_cfg = 1\n_cfg = 2\n"
+           "@jax.jit\ndef f(_cfg):\n    return _cfg + 1\n")
+    assert codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# SF003 iteration order
+# ---------------------------------------------------------------------------
+
+def test_sf003_for_over_set_fires():
+    src = "s = {1, 2, 3}\nacc = 0.0\nfor x in s:\n    acc += x\n"
+    assert codes(src) == ["SF003"]
+
+
+def test_sf003_set_difference_and_union_fire():
+    src = ("def f(a, b):\n"
+           "    out = []\n"
+           "    for x in set(a) - set(b):\n"
+           "        out.append(x)\n"
+           "    return out\n")
+    assert codes(src) == ["SF003"]
+    src = "u = set()\nu |= {1}\ntotal = sum(u)\n"
+    assert codes(src) == ["SF003"]
+
+
+def test_sf003_comprehension_and_list_over_set_fire():
+    assert codes("d = {k: 0 for k in {1, 2}}\n") == ["SF003"]
+    assert codes("xs = list({1, 2})\n") == ["SF003"]
+
+
+def test_sf003_module_set_iterated_in_function_fires():
+    src = ("NAMES = set()\n"
+           "def f():\n    return [n for n in NAMES]\n")
+    assert codes(src) == ["SF003"]
+
+
+def test_sf003_filesystem_listing_fires():
+    src = ("import glob\n"
+           "def f():\n"
+           "    return [open(p) for p in glob.glob('*.json')]\n")
+    assert codes(src) == ["SF003"]
+    src = ("import os\n"
+           "def f(d):\n"
+           "    for name in os.listdir(d):\n        print(name)\n")
+    assert codes(src) == ["SF003"]
+
+
+def test_sf003_sorted_blesses_everything():
+    src = ("import glob\n"
+           "s = {3, 1}\n"
+           "xs = [x for x in sorted(s)]\n"
+           "fs = sorted(glob.glob('*.json'))\n"
+           "for f in fs:\n    print(f)\n")
+    assert codes(src) == []
+
+
+def test_sf003_order_insensitive_uses_are_clean():
+    src = ("s = {1, 2}\nt = {2, 3}\n"
+           "n = len(s)\nok = 1 in s\nm = max(s)\n"
+           "u = s | t\nboth = s & t\n"
+           "mapped = {x + 1 for x in s}\n")
+    assert codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# SF004 config-field consumption
+# ---------------------------------------------------------------------------
+
+_CFG = ("import dataclasses\n"
+        "@dataclasses.dataclass\n"
+        "class DTrainConfig:\n"
+        "    lr: float = 0.1\n"
+        "    dead_knob: int = 0\n")
+
+
+def test_sf004_unread_field_fires():
+    ds = diags({"src/repro/dtrain/runner.py": _CFG,
+                "src/repro/dtrain/trainer.py": "def f(cfg):\n    return cfg.lr\n"})
+    assert [d.code for d in ds] == ["SF004"]
+    assert "dead_knob" in ds[0].message
+
+
+def test_sf004_attribute_read_consumes():
+    ds = diags({"src/repro/dtrain/runner.py": _CFG,
+                "src/repro/dtrain/trainer.py":
+                    "def f(cfg):\n    return cfg.lr * cfg.dead_knob\n"})
+    assert ds == []
+
+
+def test_sf004_rejection_table_string_consumes():
+    src = _CFG + '_METHOD_FIELDS = ("dead_knob",)\n'
+    ds = diags({"src/repro/dtrain/runner.py": src,
+                "src/repro/dtrain/trainer.py": "def f(cfg):\n    return cfg.lr\n"})
+    assert ds == []
+
+
+def test_sf004_docstring_mention_does_not_consume():
+    ds = diags({"src/repro/dtrain/runner.py": _CFG,
+                "src/repro/dtrain/trainer.py":
+                    '"""the dead_knob knob is cool"""\n'
+                    "def f(cfg):\n    return cfg.lr\n"})
+    assert [d.code for d in ds] == ["SF004"]
+
+
+def test_sf004_ignores_config_classes_outside_src():
+    ds = diags({"tests/helper.py": _CFG})
+    assert ds == []
+
+
+# ---------------------------------------------------------------------------
+# SF005 ledger conservation
+# ---------------------------------------------------------------------------
+
+_TRANSPORT = ("class TransportBase:\n"
+              "    ledger = None\n"
+              "class FloodTransport(TransportBase):\n"
+              "    def exchange(self, net, payload, t):\n"
+              "        net.inject(0, payload)\n"
+              "        return net.rounds_padded(2)\n")
+
+
+def test_sf005_transport_enqueue_is_clean():
+    assert diags({"src/repro/core/transport.py": _TRANSPORT}) == []
+
+
+def test_sf005_enqueue_outside_transport_fires():
+    ds = diags({"src/repro/core/transport.py": _TRANSPORT,
+                "src/repro/dtrain/trainer.py":
+                    "def run(net, msg):\n    net.inject(0, msg)\n"})
+    assert [d.code for d in ds] == ["SF005"]
+    ds = diags({"src/repro/core/transport.py": _TRANSPORT,
+                "src/repro/dtrain/methods/sneaky.py":
+                    "class SneakyMethod:\n"
+                    "    def step(self, net):\n"
+                    "        return net.rounds_arrays(1)\n"})
+    assert [d.code for d in ds] == ["SF005"]
+
+
+def test_sf005_gossip_module_functions_fire():
+    ds = diags({"src/repro/core/transport.py": _TRANSPORT,
+                "src/repro/dtrain/methods/g.py":
+                    "from repro.core import gossip\n"
+                    "def f(x, W):\n    return gossip.mix(x, W)\n"})
+    assert [d.code for d in ds] == ["SF005"]
+
+
+def test_sf005_substrate_and_tests_are_out_of_scope():
+    # flood.py implements the primitives; tests drive networks directly
+    ds = diags({"src/repro/core/flood.py":
+                    "class FloodNetwork:\n"
+                    "    def full_flood(self):\n"
+                    "        return self.rounds(3)\n",
+                "tests/test_x.py": "def t(net, m):\n    net.inject(0, m)\n"})
+    assert ds == []
+
+
+# ---------------------------------------------------------------------------
+# SF006 kernel dispatch
+# ---------------------------------------------------------------------------
+
+def test_sf006_ref_import_outside_kernels_fires():
+    ds = diags("from repro.kernels import ref\n",
+               rel="src/repro/models/perturb.py")
+    assert [d.code for d in ds] == ["SF006"]
+
+
+def test_sf006_pallas_call_outside_kernels_fires():
+    src = ("import jax.experimental.pallas as pl\n"
+           "out = pl.pallas_call(None)\n")
+    ds = diags(src, rel="src/repro/core/subcge.py")
+    assert [d.code for d in ds] == ["SF006", "SF006"]  # import + call
+
+
+def test_sf006_package_attribute_path_fires():
+    ds = diags("from repro import kernels\ny = kernels.ref.subcge_apply\n")
+    assert [d.code for d in ds] == ["SF006"]
+
+
+def test_sf006_ops_dispatch_is_clean():
+    src = ("from repro.kernels import ops as kops\n"
+           "def f(W, U, A, V):\n"
+           "    return kops.subcge_apply(W, U, A, V, backend='jnp')\n")
+    assert diags(src) == []
+
+
+def test_sf006_inside_kernels_is_clean():
+    src = ("import jax.experimental.pallas as pl\n"
+           "from repro.kernels import ref\n"
+           "out = pl.pallas_call(None)\n")
+    assert diags(src, rel="src/repro/kernels/new_kernel.py") == []
+
+
+# ---------------------------------------------------------------------------
+# SF000 suppressions
+# ---------------------------------------------------------------------------
+
+def test_justified_suppression_silences_the_rule():
+    src = ("s = {1, 2}\n"
+           "xs = list(s)  # sfcheck: noqa[SF003] -- membership snapshot, "
+           "order never read\n")
+    assert diags(src) == []
+
+
+def test_unjustified_suppression_is_sf000():
+    src = "s = {1, 2}\nxs = list(s)  # sfcheck: noqa[SF003]\n"
+    assert codes(src) == [SUPPRESSION_CODE]
+
+
+def test_blanket_suppression_with_reason():
+    src = ("import numpy as np\n"
+           "np.random.seed(0)  # sfcheck: noqa -- fixture corpus, "
+           "not protocol randomness\n")
+    assert diags(src) == []
+
+
+def test_suppression_naming_unknown_rule_is_sf000():
+    src = "x = 1  # sfcheck: noqa[SF777] -- no such rule\n"
+    assert codes(src) == [SUPPRESSION_CODE]
+
+
+def test_suppression_only_covers_named_codes():
+    src = ("import numpy as np\n"
+           "s = {1, 2}\n"
+           "xs = [np.random.rand() for _ in s]"
+           "  # sfcheck: noqa[SF003] -- order-free fixture\n")
+    assert codes(src) == ["SF001"]
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def test_syntax_error_is_reported_not_raised():
+    assert codes("def f(:\n") == [PARSE_ERROR_CODE]
+
+
+def test_select_filters_rules():
+    src = ("import numpy as np\nnp.random.seed(0)\n"
+           "for x in {1, 2}:\n    print(x)\n")
+    assert codes(src) == ["SF001", "SF003"]
+    assert codes(src, select={"SF001"}) == ["SF001"]
+
+
+def test_rule_catalogue_is_complete():
+    from repro.analysis.rules import RULES
+    assert [r.code for r in RULES] == [
+        "SF001", "SF002", "SF003", "SF004", "SF005", "SF006"]
+    assert all(r.summary for r in RULES)

@@ -1,0 +1,23 @@
+"""Tier-1 gate: the repo itself must be sfcheck-clean.
+
+``python -m repro.analysis src tests benchmarks examples`` and this test
+check the same thing; the test keeps the invariant enforced for anyone
+running only pytest.  Every finding is either fixed or carries a
+``# sfcheck: noqa[SF0xx] -- why`` suppression — SF000 (reported here
+like any other code) rejects suppressions without a justification.
+"""
+import pathlib
+
+from repro.analysis.engine import check_paths
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+TREE = ["src", "tests", "benchmarks", "examples"]
+
+
+def test_repo_tree_is_sfcheck_clean():
+    paths = [REPO / d for d in TREE if (REPO / d).exists()]
+    diagnostics = check_paths(paths, root=REPO)
+    assert not diagnostics, (
+        f"{len(diagnostics)} sfcheck violation(s) — fix them or suppress "
+        "with a justified '# sfcheck: noqa[SF0xx] -- why':\n"
+        + "\n".join(d.render() for d in diagnostics))

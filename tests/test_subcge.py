@@ -3,10 +3,9 @@ O(n + r·d) vectorized aggregation (paper §3.4, eq. 9-10)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
-from repro.core import seeds, subcge, zo
+from repro.core import subcge, zo
 from repro.core.subcge import SubCGEConfig
 
 

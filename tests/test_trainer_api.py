@@ -1,6 +1,5 @@
 """Method × Transport plugin API: registry smoke, per-method config
 validation, checkpoint/resume bitwise fidelity, RunResult.to_json."""
-import dataclasses
 import json
 import os
 
