@@ -1,0 +1,88 @@
+"""Wall-clock-to-loss under compute heterogeneity (ISSUE 8).
+
+Runs SeedFlood twice on the same two-speed trace — half the swarm 4×
+slower than the other half — once through the synchronous barrier loop
+(every step waits for the slowest client) and once through the
+event-driven EventTrainer (each client steps at its own rate, flood
+messages carry per-edge delay).  Both runs see identical seeds, data, and
+topology; only the clock model differs.
+
+The headline metric is *virtual time to target loss*: the target is the
+worse of the two runs' best losses (so both curves provably cross it), and
+``speedup = t_barrier / t_async``.  The barrier run's loss curve is
+timestamped by ``barrier_schedule`` — its step t completes when the
+slowest client finishes step t.  Emits ``BENCH_async.json`` so CI tracks
+the async advantage alongside the step/kernel microbenches.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_async.py [--clients 8] [--steps 24]
+                                                    [--out BENCH_async.json]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.dtrain.runner import DTrainConfig, run, sim_arch
+from repro.sim import TraceSet, barrier_schedule, time_to_loss
+
+HETEROGENEITY = 4.0     # slow clients' compute time / fast clients'
+
+
+def _cfg(n: int, steps: int) -> DTrainConfig:
+    return DTrainConfig(
+        method="seedflood", n_clients=n, topology="ring", steps=steps,
+        lr=1e-2, batch_size=4, subcge_rank=8,
+        arch=sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64))
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--clients", type=int, default=8)
+    p.add_argument("--steps", type=int, default=24)
+    p.add_argument("--out", default="BENCH_async.json")
+    args = p.parse_args()
+
+    trace = TraceSet.two_speed(args.clients, fast_s=1.0,
+                               slow_s=HETEROGENEITY)
+    cfg = _cfg(args.clients, args.steps)
+    t0 = time.time()
+
+    r_sync = run(cfg)
+    barrier = barrier_schedule(trace, args.steps)
+    sync_curve = list(zip(barrier, r_sync.loss_curve))
+
+    r_async = run(dataclasses.replace(cfg, trace=trace))
+    async_curve = r_async.extra["loss_vs_virtual_time"]
+
+    # worse of the two best losses: the deepest level both runs reach
+    target = max(min(l for _, l in sync_curve),
+                 min(l for _, l in async_curve))
+    t_sync = time_to_loss(sync_curve, target)
+    t_async = time_to_loss(async_curve, target)
+    speedup = t_sync / t_async if t_async > 0 else float("inf")
+
+    out = {
+        "bench": "seedflood_async",
+        "clients": args.clients, "steps": args.steps,
+        "heterogeneity": HETEROGENEITY,
+        "target_loss": target,
+        "virtual_s_to_target": {"barrier": t_sync, "async": t_async},
+        "async_speedup": round(speedup, 3),
+        "virtual_time_total": {"barrier": barrier[-1],
+                               "async": r_async.extra["virtual_time_s"]},
+        "total_bytes": {"barrier": r_sync.total_bytes,
+                        "async": r_async.total_bytes},
+        "final_loss": {"barrier": min(l for _, l in sync_curve),
+                       "async": min(l for _, l in async_curve)},
+        "bench_wall_s": round(time.time() - t0, 1),
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"target loss {target:.4f}: barrier {t_sync:.1f}s vs async "
+          f"{t_async:.1f}s virtual -> {speedup:.2f}x speedup")
+    print(f"wrote {args.out} ({out['bench_wall_s']}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Asynchronous swarm (DESIGN.md §9): trace-driven heterogeneous training.
+
+A lognormal-heterogeneous swarm — every client has its own per-step compute
+time — trains SeedFlood through the discrete-event engine: no barriers,
+flood messages carry per-edge delay, and the sender-epoch replay keeps
+arbitrarily stale arrivals exact.  Mid-run one client straggles 3× for a
+window and another preempts entirely; a churn schedule also drops and
+rejoins a client to show anti-entropy working on the virtual clock.
+
+The run prints loss against *virtual time* next to the synchronous-barrier
+baseline on the same trace, where every step waits for the slowest client.
+
+    PYTHONPATH=src python examples/async_swarm.py
+    PYTHONPATH=src python examples/async_swarm.py --clients 12 --steps 30
+"""
+import argparse
+import dataclasses
+
+from repro.core.messages import fmt_bytes
+from repro.dtrain.runner import DTrainConfig, run, sim_arch
+from repro.sim import Episode, TraceSet, barrier_schedule
+from repro.topology.dynamic import ChurnSchedule
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--clients", type=int, default=8)
+    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--sigma", type=float, default=0.5,
+                   help="lognormal spread of per-client compute times")
+    args = p.parse_args()
+    n = args.clients
+
+    base = TraceSet.lognormal(n, median_s=1.0, sigma=args.sigma, seed=7)
+    mid = base.ref_step_s * args.steps / 2
+    trace = dataclasses.replace(base, episodes=(
+        Episode(0, mid, mid + 4 * base.ref_step_s, "straggle", 3.0),
+        Episode(1, mid, mid + 2 * base.ref_step_s, "preempt"),
+    ))
+    churn = ChurnSchedule.leave_rejoin([n - 1], args.steps // 4,
+                                       3 * args.steps // 4)
+    print(f"{n} clients on a ring, compute {min(trace.compute_s):.2f}-"
+          f"{max(trace.compute_s):.2f} s/step; client 0 straggles 3x and "
+          f"client 1 preempts mid-run; client {n - 1} churns out "
+          f"t={args.steps // 4}..{3 * args.steps // 4}\n")
+
+    cfg = DTrainConfig(
+        method="seedflood", n_clients=n, topology="ring", steps=args.steps,
+        lr=1e-2, batch_size=4, subcge_rank=8, trace=trace, churn=churn,
+        arch=sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64))
+    r = run(cfg)
+
+    curve = r.extra["loss_vs_virtual_time"]
+    barrier_end = barrier_schedule(trace, args.steps)[-1]
+    print(f"{'virtual s':>10} {'loss':>8}")
+    stride = max(1, len(curve) // 12)
+    for vt, loss in curve[::stride]:
+        print(f"{vt:>10.2f} {loss:>8.4f}")
+    print(f"\nasync finished in {r.extra['virtual_time_s']:.1f} virtual s "
+          f"(barrier baseline: {barrier_end:.1f} s), "
+          f"{len(curve)} cohort dispatches, "
+          f"{fmt_bytes(r.total_bytes)} flooded, gmp={r.gmp:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -113,6 +113,9 @@ class RunResult:
     total_bytes: float
     consensus_error: float
     wall_s: float
+    # jit-compilation wall time of the first executed step, reported apart
+    # from extra["step_wall_s"] so bench medians stay steady-state
+    compile_wall_s: float = 0.0
     extra: dict = dataclasses.field(default_factory=dict)
 
     #: extra[] entries excluded from to_json(): whole parameter pytrees that
@@ -145,7 +148,8 @@ class RunResult:
             "bytes_per_edge": self.bytes_per_edge,
             "total_bytes": self.total_bytes,
             "consensus_error": self.consensus_error,
-            "wall_s": self.wall_s, "extra": extra,
+            "wall_s": self.wall_s, "compile_wall_s": self.compile_wall_s,
+            "extra": extra,
         })
 
 

@@ -64,7 +64,7 @@ def _gossip_spec(name: str, *, zeroth_order: bool, use_lora: bool,
                    else None)
         return GossipMethod(cfg, name, local_cls(), adapter)
 
-    consumes = set()
+    consumes = {"trace", "sim_latency_s"}
     if choco:
         consumes.add("choco_density")
     if use_lora:
@@ -81,7 +81,8 @@ METHOD_SPECS: dict[str, MethodSpec] = {
         name="seedflood", make_method=SeedFloodMethod,
         make_transport=_flood_transport,
         consumes=frozenset({"flood_k", "flood_backend", "batched_step",
-                            "epoch_replay", "drain", "kernel_backend"}),
+                            "epoch_replay", "drain", "kernel_backend",
+                            "trace", "sim_latency_s", "sim_churn_step_s"}),
         supports_churn=True),
     "dsgd": _gossip_spec("dsgd", zeroth_order=False, use_lora=False,
                          choco=False),

@@ -40,6 +40,7 @@ from repro.data import synthetic
 from repro.dtrain.api import RunResult, Setup, sim_arch  # noqa: F401  (re-export)
 from repro.dtrain.methods import METHOD_SPECS, MethodSpec
 from repro.dtrain.trainer import Trainer
+from repro.sim import EventTrainer, as_trace, wrap_async
 from repro.topology.dynamic import ChurnSchedule
 
 
@@ -97,6 +98,19 @@ class DTrainConfig:
     # drives the real Pallas kernels through the interpreter (CI on CPU).
     # See repro.kernels.ops and DESIGN.md §7.
     kernel_backend: str = "auto"
+    # event-driven asynchronous runs (DESIGN.md §9): a TraceSet, trace-JSON
+    # dict, or path to one switches the run onto the discrete-event
+    # EventTrainer, where each client steps at its trace rate and flood
+    # messages arrive with per-edge delay.  None keeps the synchronous
+    # barrier loop (with TraceSet.constant defaults the two are bitwise
+    # identical — pinned by tests/test_sim.py).
+    trace: Any = None
+    # extra per-delivery latency added on top of the trace's per-client
+    # propagation terms (one knob for "same trace, slower network").
+    sim_latency_s: float = 0.0
+    # virtual seconds one churn-schedule step index spans; None uses the
+    # trace's median per-step compute time.
+    sim_churn_step_s: float | None = None
 
 
 #: DTrainConfig fields that belong to specific methods.  A non-default value
@@ -105,7 +119,8 @@ class DTrainConfig:
 #: are consumed by enough methods that rejecting them would be noise).
 _METHOD_FIELDS = ("momentum", "choco_density", "flood_k", "flood_backend",
                   "batched_step", "epoch_replay", "drain", "lora_r",
-                  "lora_alpha", "kernel_backend")
+                  "lora_alpha", "kernel_backend", "trace", "sim_latency_s",
+                  "sim_churn_step_s")
 
 _DEFAULTS = {f.name: f.default for f in dataclasses.fields(DTrainConfig)}
 
@@ -138,6 +153,33 @@ def validate_config(cfg: DTrainConfig, spec: MethodSpec | None = None) -> None:
                 f"ignored (only {users} read it)")
     if cfg.churn is not None and not spec.supports_churn:
         raise ValueError(f"method '{spec.name}' does not support churn")
+    if cfg.trace is None:
+        if cfg.sim_latency_s != 0.0 or cfg.sim_churn_step_s is not None:
+            raise ValueError(
+                "sim_latency_s/sim_churn_step_s only apply to event-driven "
+                "runs and would be silently ignored — set 'trace' as well")
+    else:
+        if cfg.checkpoint_every or cfg.resume_from:
+            raise ValueError("event-driven runs do not support "
+                             "checkpoint/resume yet")
+        if cfg.flood_k is not None:
+            raise ValueError("flood_k has no meaning under per-edge "
+                             "timestamped delivery — unset it for trace runs")
+        if not cfg.epoch_replay:
+            raise ValueError("event-driven runs require epoch_replay=True: "
+                             "arbitrarily stale arrivals are only exact "
+                             "under sender-epoch replay")
+        if cfg.flood_backend == "numpy":
+            raise ValueError("the numpy bitset flood engine is "
+                             "round-synchronous; event-driven runs need "
+                             "flood_backend='python' (or 'auto')")
+        if cfg.drain:
+            raise ValueError("event-driven runs always drain — "
+                             "'drain' would be silently ignored")
+        if cfg.churn is not None and spec.name != "seedflood":
+            raise ValueError(f"method '{spec.name}' cannot combine churn "
+                             "with a trace (gossip mixing is a barrier over "
+                             "all clients)")
     if cfg.checkpoint_every and not cfg.checkpoint_dir:
         raise ValueError("checkpoint_every requires checkpoint_dir")
     if cfg.checkpoint_dir and not cfg.checkpoint_every:
@@ -158,11 +200,29 @@ def _churn_schedule(cfg: DTrainConfig) -> ChurnSchedule | None:
 
 def _run_spec(spec: MethodSpec, cfg: DTrainConfig) -> RunResult:
     validate_config(cfg, spec)
+    if cfg.trace is not None:
+        return _run_event(spec, cfg)
     setup = Setup(cfg)
     method = spec.make_method(cfg)
     transport = spec.make_transport(cfg, setup)
     return Trainer(cfg, setup, method, transport,
                    churn=_churn_schedule(cfg)).run()
+
+
+def _run_event(spec: MethodSpec, cfg: DTrainConfig) -> RunResult:
+    """Trace-clocked asynchronous run: same Method, async-adapted Transport,
+    EventTrainer loop (DESIGN.md §9)."""
+    trace = as_trace(cfg.trace, cfg.n_clients)
+    if "flood_backend" in spec.consumes:
+        # the event engine delivers per edge; only the per-message reference
+        # engine supports that ("auto" would pick the bitset engine at scale)
+        cfg = dataclasses.replace(cfg, flood_backend="python")
+    setup = Setup(cfg)
+    method = spec.make_method(cfg)
+    transport = wrap_async(spec.make_transport(cfg, setup), trace,
+                           cfg.sim_latency_s)
+    return EventTrainer(cfg, setup, method, transport, trace,
+                        churn=_churn_schedule(cfg)).run()
 
 
 def _method_runner(spec: MethodSpec) -> Callable[[DTrainConfig], RunResult]:

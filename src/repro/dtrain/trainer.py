@@ -97,7 +97,8 @@ class Trainer:
         loss_curve: list[float] = []
         acc_curve: list[tuple[int, float]] = []
         consensus_curve: list[tuple[int, float]] = []
-        step_wall_s: list[float] = []   # [0] includes compile (bench_step)
+        step_wall_s: list[float] = []   # steady-state samples only
+        compile_wall_s = 0.0            # first executed step (pays jit compile)
         curves = (loss_curve, acc_curve, consensus_curve, step_wall_s)
         start = 0
         if cfg.resume_from:
@@ -110,8 +111,10 @@ class Trainer:
             t_step = time.perf_counter()
             # churn events land at the start of the step; rejoined clients'
             # anti-entropy catch-up rides in this step's exchange
-            if self.churn is not None and self.churn.events_at(t):
-                transport.apply_churn(self.churn.events_at(t))
+            if self.churn is not None:
+                events = self.churn.events_at(t)
+                if events:
+                    transport.apply_churn(events)
             active = transport.active_mask()
 
             batch = s.batches(t)
@@ -125,7 +128,13 @@ class Trainer:
             handle = method.wall_handle(state)
             if handle is not None:
                 jax.block_until_ready(handle)
-            step_wall_s.append(time.perf_counter() - t_step)
+            # the first step this process executes pays jit compilation; it
+            # goes to compile_wall_s so step_wall_s stays steady-state
+            dt = time.perf_counter() - t_step
+            if t == start:
+                compile_wall_s = dt
+            else:
+                step_wall_s.append(dt)
 
             if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
                 stacked = method.params_of(state)
@@ -154,4 +163,5 @@ class Trainer:
             bytes_per_edge=transport.ledger.per_edge,
             total_bytes=transport.ledger.total_bytes,
             consensus_error=active_consensus(stacked, active),
-            wall_s=time.time() - t0, extra=extra)
+            wall_s=time.time() - t0, compile_wall_s=compile_wall_s,
+            extra=extra)

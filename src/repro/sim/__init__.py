@@ -1,0 +1,14 @@
+"""Deterministic discrete-event simulation of asynchronous swarms (DESIGN.md §9)."""
+from repro.sim.async_transport import (AsyncFloodTransport,
+                                       AsyncGossipTransport, wrap_async)
+from repro.sim.event_trainer import (EventTrainer, barrier_schedule,
+                                     time_to_loss)
+from repro.sim.events import Event, EventQueue
+from repro.sim.traces import Episode, TraceSet, as_trace
+
+__all__ = [
+    "AsyncFloodTransport", "AsyncGossipTransport", "wrap_async",
+    "EventTrainer", "barrier_schedule", "time_to_loss",
+    "Event", "EventQueue",
+    "Episode", "TraceSet", "as_trace",
+]

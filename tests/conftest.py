@@ -6,5 +6,16 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    # XLA-CPU state accumulated over hundreds of jit compilations in one
+    # process eventually segfaults inside backend_compile (seen at ~400
+    # tests); dropping compiled executables at module boundaries keeps the
+    # process healthy at the cost of some cross-module recompilation.
+    yield
+    jax.clear_caches()

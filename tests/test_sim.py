@@ -1,0 +1,292 @@
+"""Event-driven simulator (repro.sim): queue determinism, trace math, the
+sync≡async bitwise oracles, heterogeneous determinism, config validation."""
+import dataclasses
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.dtrain.runner import DTrainConfig, run, sim_arch, validate_config
+from repro.sim import (EventQueue, Episode, TraceSet, as_trace,
+                       barrier_schedule, time_to_loss)
+from repro.sim import events
+from repro.topology.dynamic import ChurnSchedule
+
+
+def _cfg(**kw):
+    base = dict(n_clients=4, topology="ring", steps=3, lr=1e-2, batch_size=4,
+                subcge_rank=8, local_iters=2,
+                arch=sim_arch(d_model=32, n_layers=1, n_heads=2, d_ff=64))
+    base.update(kw)
+    return DTrainConfig(**base)
+
+
+def _stacked_equal(a, b) -> bool:
+    return all(bool((np.asarray(x) == np.asarray(y)).all())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _assert_oracle(r_sync, r_async, check_final=True):
+    """The bitwise sync≡async contract: curves, ledger, final parameters."""
+    assert r_sync.loss_curve == r_async.loss_curve
+    assert r_sync.acc_curve == r_async.acc_curve
+    assert r_sync.total_bytes == r_async.total_bytes
+    for key in ("n_messages", "sync_bytes", "n_syncs"):   # flood-only stats
+        assert r_sync.extra.get(key) == r_async.extra.get(key)
+    assert r_sync.gmp == r_async.gmp
+    assert r_sync.consensus_error == r_async.consensus_error
+    if check_final:
+        assert _stacked_equal(r_sync.extra["final_stacked"],
+                              r_async.extra["final_stacked"])
+
+
+# ---------------------------------------------------------------------------
+# event queue
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_by_content_not_insertion():
+    """Pop order is a pure function of event content: any permutation of the
+    pushes yields the same sequence (the determinism the tiebreak rule
+    promises)."""
+    evs = [events.step_event(1.0, 2, 0), events.step_event(1.0, 0, 0),
+           events.deliver_event(1.0, 1, 0, 1, ()),
+           events.deliver_event(1.0, 1, 0, 2, ()),
+           events.deliver_event(1.0, 3, 2, 1, ()),
+           events.churn_event(1.0, 1), events.step_event(0.5, 3, 0)]
+    orders = [evs, evs[::-1], evs[3:] + evs[:3]]
+    popped = []
+    for order in orders:
+        q = EventQueue()
+        for ev in order:
+            q.push(ev)
+        popped.append([q.pop() for _ in range(len(order))])
+    assert popped[0] == popped[1] == popped[2]
+    # and the ranking is STEP < DELIVER < CHURN at equal time
+    ranks = [ev.rank for ev in popped[0] if ev.time == 1.0]
+    assert ranks == sorted(ranks)
+
+
+def test_event_queue_peek_and_len():
+    q = EventQueue()
+    assert q.peek() is None and not q
+    q.push(events.step_event(2.0, 0, 1))
+    q.push(events.step_event(1.0, 0, 0))
+    assert len(q) == 2 and q.peek().time == 1.0
+    assert q.pop().step == 0
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+def test_trace_json_roundtrip(tmp_path):
+    trace = TraceSet(
+        compute_s=(1.0, 2.5), bandwidth_bps=(1e6, math.inf),
+        latency_s=(0.01, 0.0),
+        episodes=(Episode(0, 3.0, 5.0, "straggle", 2.0),
+                  Episode(1, 1.0, 2.0, "preempt")))
+    path = str(tmp_path / "trace.json")
+    trace.save(path)
+    assert TraceSet.load(path) == trace
+    # infinite bandwidth survives as JSON null
+    assert json.loads(open(path).read())["bandwidth_bps"][1] is None
+    assert as_trace(path, 2) == trace
+    assert as_trace(trace.to_json(), 2) == trace
+    with pytest.raises(ValueError, match="covers 2 clients"):
+        as_trace(trace, 3)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="positive"):
+        TraceSet((0.0,), (1.0,), (0.0,))
+    with pytest.raises(ValueError, match="lengths"):
+        TraceSet((1.0, 1.0), (1.0,), (0.0,))
+    with pytest.raises(ValueError, match="overlapping"):
+        TraceSet((1.0,), (math.inf,), (0.0,),
+                 episodes=(Episode(0, 0.0, 2.0, "preempt"),
+                           Episode(0, 1.0, 3.0, "preempt")))
+    with pytest.raises(ValueError, match="kind"):
+        Episode(0, 0.0, 1.0, "pause")
+
+
+def test_finish_time_integrates_episodes():
+    trace = TraceSet((1.0,), (math.inf,), (0.0,),
+                     episodes=(Episode(0, 1.0, 2.0, "preempt"),
+                               Episode(0, 4.0, 6.0, "straggle", 2.0)))
+    # 1.0s of work starting at 0.5: runs 0.5s, stalls [1,2), finishes at 2.5
+    assert trace.finish_time(0, 0.5, 1.0) == 2.5
+    # 1.0s of work starting at 4.0 at half rate finishes at 6.0... exactly
+    # consumes the episode; 0.5s of work takes 1.0s wall
+    assert trace.finish_time(0, 4.0, 0.5) == 5.0
+    # no episodes in the way: plain addition
+    assert trace.finish_time(0, 10.0, 1.0) == 11.0
+
+
+def test_edge_delay_formula():
+    trace = TraceSet((1.0, 1.0), (8e3, 4e3), (0.010, 0.020))
+    # min bandwidth wins: 100 bytes * 8 / 4e3 bps = 0.2s serialization
+    assert trace.edge_delay(0, 1, 100) == pytest.approx(0.010 + 0.020 + 0.2)
+    assert trace.edge_delay(0, 1, 100, extra_latency=0.1) == pytest.approx(
+        0.33)
+    inf = TraceSet.constant(2)
+    assert inf.edge_delay(0, 1, 10**9) == 0.0
+
+
+def test_barrier_schedule_waits_for_slowest():
+    trace = TraceSet.two_speed(4, fast_s=1.0, slow_s=4.0)
+    assert barrier_schedule(trace, 3) == [4.0, 8.0, 12.0]
+    assert time_to_loss([(1.0, 5.0), (2.0, 4.0), (3.0, 4.5)], 4.0) == 2.0
+    assert time_to_loss([(1.0, 5.0)], 1.0) == math.inf
+
+
+# ---------------------------------------------------------------------------
+# the bitwise oracles: homogeneous zero-latency event run == synchronous run
+# ---------------------------------------------------------------------------
+
+def test_async_seedflood_matches_sync_bitwise():
+    """The tentpole guarantee: with TraceSet.constant the event loop
+    reproduces the synchronous seedflood run bitwise — loss/acc curves, the
+    byte ledger, and final stacked parameters.  (The sync side drains so
+    both engines charge the trailing re-flood hops.)"""
+    cfg = _cfg(method="seedflood", n_clients=6, steps=8, subcge_tau=3,
+               eval_every=4, drain=True)
+    r_sync = run(cfg)
+    r_async = run(dataclasses.replace(cfg, drain=False,
+                                      trace=TraceSet.constant(6)))
+    _assert_oracle(r_sync, r_async)
+    assert r_async.extra["virtual_time_s"] == 8.0
+    assert len(r_async.extra["loss_vs_virtual_time"]) == 8
+
+
+def test_async_seedflood_churn_matches_sync_bitwise():
+    """Same contract under leave/rejoin churn: the event loop maps churn
+    step T to virtual time T·ref, anti-entropy catch-up is deferred to the
+    post-cohort merge, and the departing node's unreleased frontier stays
+    uncharged — ledger equality is exact, not just final-state equality."""
+    cfg = _cfg(method="seedflood", n_clients=6, steps=8, subcge_tau=3,
+               eval_every=0, drain=True,
+               churn=ChurnSchedule.leave_rejoin([2], 2, 4))
+    r_sync = run(cfg)
+    r_async = run(dataclasses.replace(cfg, drain=False,
+                                      trace=TraceSet.constant(6)))
+    _assert_oracle(r_sync, r_async)
+
+
+def test_async_gossip_matches_sync_bitwise():
+    """The gossip adapter keeps mixing a barrier; with a homogeneous trace
+    the event run is the synchronous dzsgd run bitwise (gossip has no
+    final_stacked — curves, gmp, consensus, and bytes are the contract)."""
+    cfg = _cfg(method="dzsgd", steps=6, local_iters=2, eval_every=2)
+    r_sync = run(cfg)
+    r_async = run(dataclasses.replace(cfg, trace=TraceSet.constant(4)))
+    _assert_oracle(r_sync, r_async, check_final=False)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous runs: deterministic, insertion-order independent
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_run_is_deterministic():
+    trace = TraceSet.lognormal(6, sigma=0.8, seed=3)
+    cfg = _cfg(method="seedflood", n_clients=6, steps=5, trace=trace)
+    r1, r2 = run(cfg), run(cfg)
+    assert r1.loss_curve == r2.loss_curve
+    assert r1.extra["loss_vs_virtual_time"] == r2.extra["loss_vs_virtual_time"]
+    assert r1.total_bytes == r2.total_bytes
+    assert _stacked_equal(r1.extra["final_stacked"],
+                          r2.extra["final_stacked"])
+    # per-client cohorts: more loss entries than steps
+    assert len(r1.loss_curve) > cfg.steps
+
+
+def test_event_order_independent_of_insertion_order():
+    """Scheduling the initial STEP events in reversed client order must not
+    change anything — the queue orders on content, and same-key cascades
+    are themselves key-ordered."""
+    from repro.dtrain.api import Setup
+    from repro.dtrain.methods import METHOD_SPECS
+    from repro.sim import EventTrainer, wrap_async
+
+    trace = TraceSet.lognormal(4, sigma=0.6, seed=1)
+    cfg = _cfg(method="seedflood", steps=4, trace=trace,
+               flood_backend="python")
+    spec = METHOD_SPECS["seedflood"]
+
+    def run_order(order):
+        setup = Setup(cfg)
+        transport = wrap_async(spec.make_transport(cfg, setup), trace)
+        return EventTrainer(cfg, setup, spec.make_method(cfg), transport,
+                            trace, init_order=order).run()
+
+    r_fwd = run_order([0, 1, 2, 3])
+    r_rev = run_order([3, 2, 1, 0])
+    assert r_fwd.loss_curve == r_rev.loss_curve
+    assert r_fwd.total_bytes == r_rev.total_bytes
+    assert _stacked_equal(r_fwd.extra["final_stacked"],
+                          r_rev.extra["final_stacked"])
+
+
+def test_straggler_episode_slows_only_its_client():
+    base = TraceSet.constant(4)
+    ep = TraceSet((1.0,) * 4, (math.inf,) * 4, (0.0,) * 4,
+                  episodes=(Episode(2, 0.0, 100.0, "straggle", 3.0),))
+    cfg = _cfg(method="seedflood", steps=4)
+    r0 = run(dataclasses.replace(cfg, trace=base))
+    r1 = run(dataclasses.replace(cfg, trace=ep))
+    assert r0.extra["virtual_time_s"] == 4.0
+    assert r1.extra["virtual_time_s"] == 12.0  # client 2 at 1/3 rate
+    # everyone still takes all 4 steps: 3 fast cohorts + 1 straggler each
+    assert len(r1.loss_curve) == 8
+
+
+def test_async_beats_barrier_on_time_to_loss():
+    """Under 4× compute heterogeneity the async swarm reaches the barrier
+    run's final loss in strictly less virtual time (the headline metric of
+    BENCH_async.json, pinned at miniature scale)."""
+    trace = TraceSet.two_speed(6, fast_s=1.0, slow_s=4.0)
+    cfg = _cfg(method="seedflood", n_clients=6, steps=6)
+    r_sync = run(cfg)
+    r_async = run(dataclasses.replace(cfg, trace=trace))
+    barrier = barrier_schedule(trace, cfg.steps)
+    sync_curve = list(zip(barrier, r_sync.loss_curve))
+    target = max(min(r_sync.loss_curve), min(r_async.loss_curve))
+    assert time_to_loss(r_async.extra["loss_vs_virtual_time"], target) \
+        < time_to_loss(sync_curve, target)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(trace="t.json", method="central_zo"), "trace"),
+    (dict(trace="t.json", method="gossip_sr"), "trace"),
+    (dict(sim_latency_s=0.5), "set 'trace' as well"),
+    (dict(sim_churn_step_s=1.0), "set 'trace' as well"),
+    (dict(trace="t.json", checkpoint_every=2, checkpoint_dir="d"),
+     "checkpoint"),
+    (dict(trace="t.json", flood_k=2), "flood_k"),
+    (dict(trace="t.json", epoch_replay=False), "epoch_replay"),
+    (dict(trace="t.json", flood_backend="numpy"), "round-synchronous"),
+    (dict(trace="t.json", drain=True), "always drain"),
+    (dict(trace="t.json", method="dzsgd", churn=ChurnSchedule.leave_rejoin(
+        [1], 1, 2)), "cannot combine churn"),
+])
+def test_trace_config_rejections(kw, match):
+    kw.setdefault("method", "seedflood")
+    with pytest.raises(ValueError, match=match):
+        validate_config(_cfg(**kw))
+
+
+def test_trace_must_match_swarm_size():
+    with pytest.raises(ValueError, match="covers 2 clients"):
+        run(_cfg(method="seedflood", trace=TraceSet.constant(2)))
+
+
+def test_trace_json_dict_accepted_by_run():
+    trace = TraceSet.constant(4).to_json()
+    r = run(_cfg(method="seedflood", trace=trace))
+    assert len(r.loss_curve) == 3
+    assert np.isfinite(r.loss_curve).all()

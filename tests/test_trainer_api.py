@@ -92,6 +92,17 @@ def test_eval_cadence_is_uniform_across_methods():
 # RunResult.to_json
 # ---------------------------------------------------------------------------
 
+def test_compile_wall_s_split_from_step_samples():
+    """The first executed step pays jit compilation; it lands in
+    RunResult.compile_wall_s and extra["step_wall_s"] keeps only the
+    steady-state samples, so bench medians need no slicing."""
+    r = run(_cfg(method="seedflood", steps=3))
+    assert r.compile_wall_s > 0.0
+    assert len(r.extra["step_wall_s"]) == 2
+    assert all(s >= 0.0 for s in r.extra["step_wall_s"])
+    assert "compile_wall_s" in r.to_json()
+
+
 def test_to_json_is_serializable_and_drops_param_trees():
     r = run(_cfg(method="seedflood", steps=2, eval_every=1))
     d = r.to_json()
