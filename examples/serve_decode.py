@@ -1,68 +1,65 @@
-"""Serve a small model with batched requests: prefill a batch of prompts,
-then decode tokens autoregressively with the production decode_step — the
-same program the decode_32k / long_500k dry-runs lower at pod scale.
+"""Serve a small model with continuous batching: requests admit into slots,
+prefill scatters KV into reserved pages, and each step decodes one token
+for every active slot through repro.serve's paged decode program.
 
     PYTHONPATH=src python examples/serve_decode.py [--arch tinyllama-1.1b]
+
+Compiled programs are cached inside the server per shape — (batch, prompt
+length) for prefill, page bucket for decode — so the decode loop dispatches
+the SAME compiled program every step.  (An earlier version of this example
+re-traced ``jax.jit(decode)`` on every loop iteration, recompiling per
+token; throughput numbers from it measured the compiler, not the model.)
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import archs
-from repro.configs.base import InputShape
-from repro.launch import steps as steplib
-from repro.launch.mesh import make_host_mesh
 from repro.models import params as plib
 from repro.models import transformer as tf
+from repro.serve import DecodeServer, Request, ServeConfig
 
 
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="tinyllama-1.1b")
     p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--requests", type=int, default=8)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--new-tokens", type=int, default=16)
+    p.add_argument("--sampling", default="greedy",
+                   choices=("greedy", "temperature"))
     args = p.parse_args()
 
     cfg = archs.reduced(archs.get(args.arch))
-    mesh = make_host_mesh(1, 1)
-    pod = steplib.PodConfig(param_dtype=jnp.float32)
-    capacity = args.prompt_len + args.new_tokens
-
-    shape_p = InputShape("serve", capacity, args.batch, "prefill")
-    prefill, _, _, _ = steplib.build_prefill_step(cfg, shape_p, mesh, pod)
-    decode, _, _, _ = steplib.build_decode_step(
-        cfg, InputShape("serve", capacity, args.batch, "decode"), mesh, pod)
+    page = min(16, args.prompt_len + args.new_tokens)
+    ppr = -(-(args.prompt_len + args.new_tokens) // page)
+    serve = ServeConfig(max_batch=args.batch, page_size=page,
+                        n_pages=args.batch * ppr, max_seq=ppr * page,
+                        sampling=args.sampling)
 
     params = plib.init_params(tf.arch_spec(cfg), 0)
-    key = jax.random.PRNGKey(0)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+    prompts = jax.random.randint(jax.random.PRNGKey(0),
+                                 (args.requests, args.prompt_len), 0,
                                  cfg.vocab)
 
-    # prefill builds the cache over full capacity; we pass the prompt only
-    cache = tf.init_cache(cfg, args.batch, capacity, jnp.float32)
-    with mesh:
-        logits, cache, _ = tf.forward(cfg, params,
-                                      {"tokens": prompts}, cache=cache, pos=0)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out = [tok]
-        t0 = time.perf_counter()
-        for i in range(args.new_tokens - 1):
-            logits1, cache = jax.jit(decode)(params, cache, tok,
-                                             jnp.int32(args.prompt_len + i))
-            tok = jnp.argmax(logits1, axis=-1)[:, None]
-            out.append(tok)
-        dt = time.perf_counter() - t0
+    srv = DecodeServer(cfg, params, serve)
+    for b in range(args.requests):
+        srv.submit(Request(rid=b, prompt=np.asarray(prompts[b], np.int32),
+                           max_new=args.new_tokens))
+    t0 = time.perf_counter()
+    results = srv.run()
+    dt = time.perf_counter() - t0
 
-    gen = jnp.concatenate(out, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} "
+    emitted = sum(len(v) for v in results.values())
+    print(f"arch={cfg.name} slots={args.batch} requests={args.requests} "
           f"prompt={args.prompt_len} new={args.new_tokens}")
-    print(f"decode throughput: "
-          f"{args.batch * (args.new_tokens - 1) / dt:.1f} tok/s (host CPU)")
-    for b in range(args.batch):
-        print(f"  req{b}: {gen[b].tolist()}")
+    print(f"decode throughput: {emitted / dt:.1f} tok/s (host CPU); "
+          f"{srv.stats()}")
+    for b in range(args.requests):
+        print(f"  req{b}: {results[b]}")
 
 
 if __name__ == "__main__":

@@ -21,16 +21,17 @@ import ast
 
 from repro.analysis.rules import Rule
 
-#: The user-facing config surfaces (DESIGN.md §4/§3): the classes whose
+#: The user-facing config surfaces (DESIGN.md §4/§3/§10): the classes whose
 #: fields are promises to the user that a knob does something.
-CONFIG_CLASSES = ("DTrainConfig", "SubCGEConfig", "PodConfig")
+CONFIG_CLASSES = ("DTrainConfig", "SubCGEConfig", "PodConfig", "ServeConfig")
 
 
 class ConfigFieldsRule(Rule):
     code = "SF004"
     name = "config-field-consumption"
-    summary = ("every DTrainConfig/SubCGEConfig/PodConfig field must be "
-               "read somewhere in src/ (attribute or rejection-table name)")
+    summary = ("every DTrainConfig/SubCGEConfig/PodConfig/ServeConfig field "
+               "must be read somewhere in src/ (attribute or rejection-table "
+               "name)")
 
     def check_project(self, project):
         # fields: (class, field, file, node) from class bodies under src/

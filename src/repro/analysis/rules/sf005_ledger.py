@@ -11,11 +11,14 @@ a method or the trainer would move bytes nobody ever counts.
 
 Cross-module pass: the class hierarchy identifies Transport classes
 (transitive subclasses of ``TransportBase``); enqueue-primitive calls
-in ``src/repro/core`` / ``src/repro/dtrain`` outside the substrate
-modules (``core/flood.py``, ``core/gossip.py`` — where the primitives
-are *defined* and charge the ledger themselves) must sit lexically
-inside a Transport class body.  Tests/benchmarks/examples drive
-networks directly on purpose and are out of scope.
+in ``src/repro/core`` / ``src/repro/dtrain`` / ``src/repro/serve``
+outside the substrate modules (``core/flood.py``, ``core/gossip.py`` —
+where the primitives are *defined* and charge the ledger themselves)
+must sit lexically inside a Transport class body.  The serving swarm is
+in scope because its live-update bridge rides the flood: a server that
+injected or drained the network directly would receive updates no
+ledger ever billed.  Tests/benchmarks/examples drive networks directly
+on purpose and are out of scope.
 """
 from __future__ import annotations
 
@@ -43,13 +46,14 @@ TRANSPORT_BASE = "TransportBase"
 class LedgerConservationRule(Rule):
     code = "SF005"
     name = "ledger-conservation"
-    summary = ("network enqueues in core/ and dtrain/ only inside "
+    summary = ("network enqueues in core/, dtrain/ and serve/ only inside "
                "Transport classes (the CommLedger owners)")
 
     def _in_scope(self, file) -> bool:
         if file.top != "src":
             return False
-        if not (file.in_dir("core") or file.in_dir("dtrain")):
+        if not (file.in_dir("core") or file.in_dir("dtrain")
+                or file.in_dir("serve")):
             return False
         return tuple(file.parts[-2:]) not in SUBSTRATE
 

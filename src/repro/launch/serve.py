@@ -1,11 +1,15 @@
-"""Pod serving driver: prefill a batch of requests, then decode tokens with
-the production decode_step (the program the decode_32k / long_500k dry-runs
-lower at 256/512-chip scale).
+"""Pod serving driver: continuous-batching decode over a paged KV cache
+(repro.serve).  Requests admit and evict per step, prefill scatters into
+reserved pages, and decode runs one bucketed dispatch per step — the same
+programs the serve swarm simulator drives under churn.
 
     PYTHONPATH=src python -m repro.launch.serve \
-        --arch tinyllama-1.1b --reduced --batch 4 --prompt-len 32 --new 16
+        --arch tinyllama-1.1b --reduced --batch 4 --prompt-len 32 --new 16 \
+        --sampling greedy
 
-On a real pod drop --reduced and add --production-mesh.
+``--sampling temperature --temperature 0.8`` switches to temperature
+sampling (keyed per (request, position), so a run is deterministic).  On a
+real pod drop --reduced and add --production-mesh.
 """
 from __future__ import annotations
 
@@ -14,13 +18,14 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import archs
-from repro.configs.base import InputShape
 from repro.launch import steps as steplib
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import params as plib
 from repro.models import transformer as tf
+from repro.serve import SAMPLING_KINDS, DecodeServer, Request, ServeConfig
 
 
 def main(argv=None) -> int:
@@ -29,48 +34,51 @@ def main(argv=None) -> int:
                    choices=sorted(archs.REGISTRY))
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--requests", type=int, default=None,
+                   help="total requests to serve (default: --batch)")
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--new", type=int, default=16)
+    p.add_argument("--page-size", type=int, default=16)
     p.add_argument("--production-mesh", action="store_true")
-    p.add_argument("--greedy", action="store_true", default=True)
+    p.add_argument("--sampling", choices=SAMPLING_KINDS, default="greedy")
+    p.add_argument("--temperature", type=float, default=0.8)
     args = p.parse_args(argv)
 
     cfg = archs.get(args.arch)
     if args.reduced:
         cfg = archs.reduced(cfg)
-    capacity = args.prompt_len + args.new
     mesh = (make_production_mesh() if args.production_mesh
             else make_host_mesh(1, len(jax.devices())))
     pod = steplib.PodConfig(param_dtype=jnp.float32 if args.reduced
                             else jnp.bfloat16)
 
-    dshape = InputShape("serve", capacity, args.batch, "decode")
-    decode, _, in_sh, out_sh = steplib.build_decode_step(cfg, dshape, mesh, pod)
+    n_req = args.requests if args.requests is not None else args.batch
+    page = min(args.page_size, args.prompt_len + args.new)
+    ppr = -(-(args.prompt_len + args.new) // page)
+    serve = ServeConfig(max_batch=args.batch, page_size=page,
+                        n_pages=args.batch * ppr, max_seq=ppr * page,
+                        sampling=args.sampling,
+                        temperature=args.temperature,
+                        param_dtype=pod.param_dtype)
 
     params = plib.init_params(tf.arch_spec(cfg), 0, pod.param_dtype)
     prompts = jax.random.randint(jax.random.PRNGKey(0),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+                                 (n_req, args.prompt_len), 0, cfg.vocab)
 
-    with mesh:
-        cache = tf.init_cache(cfg, args.batch, capacity, pod.param_dtype)
-        logits, cache, _ = tf.forward(cfg, params, {"tokens": prompts},
-                                      cache=cache, pos=0)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        decode_j = jax.jit(decode, in_shardings=in_sh, out_shardings=out_sh)
-        out = [tok]
-        t0 = time.perf_counter()
-        for i in range(args.new - 1):
-            lg, cache = decode_j(params, cache, tok,
-                                 jnp.int32(args.prompt_len + i))
-            tok = jnp.argmax(lg, axis=-1)[:, None]
-            out.append(tok)
-        dt = time.perf_counter() - t0
+    srv = DecodeServer(cfg, params, serve, mesh=mesh, pod=pod)
+    for b in range(n_req):
+        srv.submit(Request(rid=b, prompt=np.asarray(prompts[b], np.int32),
+                           max_new=args.new))
+    t0 = time.perf_counter()
+    results = srv.run()
+    dt = time.perf_counter() - t0
 
-    gen = jnp.concatenate(out, axis=1)
-    print(f"{cfg.name}: {args.batch} requests, {args.new} new tokens each; "
-          f"{args.batch * (args.new - 1) / dt:.1f} tok/s")
-    for b in range(args.batch):
-        print(f"  req{b}: {gen[b].tolist()}")
+    emitted = sum(len(v) for v in results.values())
+    print(f"{cfg.name}: {n_req} requests x {args.new} new tokens "
+          f"({args.sampling}); {emitted / dt:.1f} tok/s; "
+          f"stats={srv.stats()}")
+    for b in range(n_req):
+        print(f"  req{b}: {results[b]}")
     return 0
 
 

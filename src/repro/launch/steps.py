@@ -346,11 +346,121 @@ def build_decode_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     return decode_step, example, in_sh, out_sh
 
 
+# ---------------------------------------------------------------------------
+# paged serving steps (repro.serve; DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def paged_pool_shardings(cfg: ArchConfig, pool_abs: Any, mesh: Mesh) -> Any:
+    """Shardings for the paged KV pool tree (reps, P, page, KV, hd): head /
+    feature axes shard over "model" when divisible; page axes stay whole —
+    the pool is indexed by physical page id, which must not be split."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path: str, leaf):
+        dims = [None] * len(leaf.shape)
+        if leaf.shape[3] % sizes.get("model", 1) == 0:
+            dims[3] = "model"
+        elif leaf.shape[4] % sizes.get("model", 1) == 0:
+            dims[4] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return seedlib.map_with_paths(one, pool_abs)
+
+
+def _paged_geometry(shape: InputShape, page_size: int | None,
+                    pages_per_req: int | None, n_pages: int | None):
+    """Default paged-pool geometry for a (seq, batch) serving shape."""
+    if page_size is None:
+        page_size = min(16, shape.seq)
+    if pages_per_req is None:
+        pages_per_req = -(-shape.seq // page_size)
+    if n_pages is None:
+        n_pages = shape.global_batch * pages_per_req
+    return page_size, pages_per_req, n_pages
+
+
+def build_paged_prefill_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                             pod: PodConfig, *, page_size: int | None = None,
+                             pages_per_req: int | None = None,
+                             n_pages: int | None = None):
+    """Prefill ``global_batch`` same-length prompts and scatter their KV into
+    the pool rows given by ``table``.  The prefill forward runs against a
+    throwaway monolithic cache of capacity == prompt length (prefill logits
+    are cache-layout independent: the T > 1 path attends the raw k/v), so
+    the returned last-position logits are bitwise the monolithic prefill's.
+    """
+    tf.check_paged_support(cfg)
+    page_size, pages_per_req, n_pages = _paged_geometry(
+        shape, page_size, pages_per_req, n_pages)
+    spec = tf.arch_spec(cfg)
+    params_abs = plib.abstract_params(spec, pod.param_dtype)
+    params_sh = plib.tree_shardings(spec, mesh, cfg.sharding_policy)
+    Bg, T = shape.global_batch, shape.seq
+    pool_abs = tf.abstract_paged_pool(cfg, n_pages, page_size, pod.param_dtype)
+    pool_sh = paged_pool_shardings(cfg, pool_abs, mesh)
+
+    def prefill_step(params, pool, tokens, table):
+        cache = tf.init_cache(cfg, Bg, T, pod.param_dtype)
+        logits, cache, _ = tf.forward(cfg, params, {"tokens": tokens},
+                                      cache=cache, pos=jnp.int32(0))
+        pool = tf.write_prefill_to_pages(cfg, cache, pool, table, page_size)
+        return logits[:, -1], pool
+
+    example = (params_abs, pool_abs,
+               jax.ShapeDtypeStruct((Bg, T), jnp.int32),
+               jax.ShapeDtypeStruct((Bg, pages_per_req), jnp.int32))
+    in_sh = (params_sh, pool_sh, _rep(mesh), _rep(mesh))
+    out_sh = (_rep(mesh), pool_sh)
+    return prefill_step, example, in_sh, out_sh
+
+
+def build_paged_decode_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                            pod: PodConfig, *, page_size: int | None = None,
+                            pages_per_req: int | None = None,
+                            n_pages: int | None = None):
+    """One token for ``global_batch`` continuous-batching request slots
+    against the paged KV pool.  Unlike :func:`build_decode_step`, ``pos`` is
+    a per-request (B,) vector and the attended width is the (bucketed) table
+    width ``pages_per_req``·``page_size``, not a monolithic capacity — the
+    serve scheduler compiles one trace per page bucket and re-dispatches as
+    the longest active request grows.
+
+    moe_gather_weights is force-disabled for the same reason as the
+    monolithic decode step (see :func:`build_decode_step`).
+    """
+    cfg = dataclasses.replace(cfg, moe_gather_weights=False)
+    tf.check_paged_support(cfg)
+    page_size, pages_per_req, n_pages = _paged_geometry(
+        shape, page_size, pages_per_req, n_pages)
+    spec = tf.arch_spec(cfg)
+    params_abs = plib.abstract_params(spec, pod.param_dtype)
+    params_sh = plib.tree_shardings(spec, mesh, cfg.sharding_policy)
+    B = shape.global_batch
+    pool_abs = tf.abstract_paged_pool(cfg, n_pages, page_size, pod.param_dtype)
+    pool_sh = paged_pool_shardings(cfg, pool_abs, mesh)
+
+    def decode_step(params, pool, tokens, table, pos_b):
+        logits, new_pool, _ = tf.forward(cfg, params, {"tokens": tokens},
+                                         cache=pool, pos=pos_b,
+                                         paged_table=table)
+        return logits[:, 0], new_pool
+
+    example = (params_abs, pool_abs,
+               jax.ShapeDtypeStruct((B, 1), jnp.int32),
+               jax.ShapeDtypeStruct((B, pages_per_req), jnp.int32),
+               jax.ShapeDtypeStruct((B,), jnp.int32))
+    in_sh = (params_sh, pool_sh, _rep(mesh), _rep(mesh), _rep(mesh))
+    out_sh = (_rep(mesh), pool_sh)
+    return decode_step, example, in_sh, out_sh
+
+
 BUILDERS = {
     "train": build_seedflood_train_step,
     "train_dsgd": build_dsgd_train_step,
     "prefill": build_prefill_step,
     "decode": build_decode_step,
+    "prefill_paged": build_paged_prefill_step,
+    "decode_paged": build_paged_decode_step,
 }
 
 

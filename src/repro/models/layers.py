@@ -61,14 +61,15 @@ ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """Rotary embedding.  x (..., T, H, hd) [hd even], positions (T,)."""
+    """Rotary embedding.  x (..., T, H, hd) [hd even], positions (T,) or, for
+    the paged-decode path, (B, T) per-request positions (the cos/sin tables
+    broadcast over the head axis either way; values for equal positions are
+    bitwise identical to the unbatched path — same elementwise ops)."""
     hd = x.shape[-1]
     freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]   # (T, hd/2)
-    cos, sin = jnp.cos(ang), jnp.sin(ang)
-    shape = (1,) * (x.ndim - 3) + (x.shape[-3], 1, hd // 2)
-    cos = cos.reshape(shape)
-    sin = sin.reshape(shape)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., T, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., T, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return out.astype(x.dtype)
@@ -77,7 +78,7 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 def sinusoidal_pos(positions: jax.Array, dim: int) -> jax.Array:
     half = dim // 2
     freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
 
@@ -88,16 +89,19 @@ def sinusoidal_pos(positions: jax.Array, dim: int) -> jax.Array:
 def attn_mask(q_pos: jax.Array, k_pos: jax.Array,
               window: int | None) -> jax.Array:
     """(T, S) boolean mask: causal, optionally sliding-window, and k-slot
-    validity (kpos = -1 marks an unwritten ring slot)."""
-    m = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] >= 0)
+    validity (kpos = -1 marks an unwritten ring slot).  Positions may carry
+    a leading batch dim — (B, T)/(B, S) — for per-request paged decode, in
+    which case the mask is (B, T, S)."""
+    m = (k_pos[..., None, :] <= q_pos[..., :, None]) & (k_pos[..., None, :] >= 0)
     if window is not None:
-        m &= k_pos[None, :] > q_pos[:, None] - window
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
     return m
 
 
 def attn_core(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
               k_pos: jax.Array, window: int | None) -> jax.Array:
-    """Grouped-query attention.  q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H*hd)."""
+    """Grouped-query attention.  q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H*hd).
+    Positions are shared (T,)/(S,) or per-request (B,T)/(B,S)."""
     B, T, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -105,7 +109,9 @@ def attn_core(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
     logits = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32)
     logits *= 1.0 / math.sqrt(hd)
     mask = attn_mask(q_pos, k_pos, window)
-    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits, _NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
     return out.reshape(B, T, H * hd)
@@ -164,6 +170,58 @@ def attention(b: Bundle, x: jax.Array, acfg: AttnCfg, pos,
 
     y = b.dense("wo", out)
     return y, new_cache
+
+
+def paged_attention(b: Bundle, x: jax.Array, acfg: AttnCfg, pos_b: jax.Array,
+                    pages: dict, table: jax.Array, rope_theta: float,
+                    pos_kind: str = "rope"):
+    """Decode-only (T == 1) GQA attention over a paged KV pool.
+
+    ``pages``: one rep-slice of the pool, ``{"k": (P, page, KV, hd),
+    "v": (P, page, KV, hd)}`` where the LAST physical page (index P-1) is the
+    dump page — inactive request slots point every table entry at it, so
+    their scatter writes land somewhere no live request ever gathers.
+    ``table``: (B, Pb) int32 physical page ids per request slot, in logical
+    order (entry p holds positions [p·page, (p+1)·page)); unreserved entries
+    point at the dump page.  ``pos_b``: (B,) int32 absolute position of the
+    incoming token per request.
+
+    The gathered width S = Pb·page plays the role of the monolithic cache
+    capacity; positions s > pos_b mask to exact-zero probability (softmax of
+    -1e30 underflows), so stale page contents contribute exact +0.0 and a
+    gather whose width equals the monolithic capacity is bitwise the ring
+    path.  Returns (y, new_pages).
+    """
+    B, T, D = x.shape
+    if T != 1:
+        raise ValueError("paged_attention is decode-only (got T="
+                         f"{T}; prefill goes through the monolithic path "
+                         "and is scattered into pages afterwards)")
+    H, KV, hd = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
+    q = b.dense("wq", x, bias="bq" if acfg.qkv_bias else None).reshape(B, T, H, hd)
+    k = b.dense("wk", x, bias="bk" if acfg.qkv_bias else None).reshape(B, T, KV, hd)
+    v = b.dense("wv", x, bias="bv" if acfg.qkv_bias else None).reshape(B, T, KV, hd)
+
+    q_pos = pos_b[:, None] + jnp.arange(T)                     # (B, 1)
+    if pos_kind == "rope":
+        q = rope(q, q_pos, rope_theta)
+        k = rope(k, q_pos, rope_theta)
+
+    page = pages["k"].shape[1]
+    Pb = table.shape[1]
+    phys = jnp.take_along_axis(table, (pos_b // page)[:, None], axis=1)[:, 0]
+    off = pos_b % page
+    kp = pages["k"].at[phys, off].set(k[:, 0].astype(pages["k"].dtype))
+    vp = pages["v"].at[phys, off].set(v[:, 0].astype(pages["v"].dtype))
+
+    S = Pb * page
+    kg = kp[table].reshape(B, S, KV, hd)
+    vg = vp[table].reshape(B, S, KV, hd)
+    s_iota = jnp.arange(S, dtype=jnp.int32)[None, :]
+    k_pos = jnp.where(s_iota <= pos_b[:, None], s_iota, -1)    # (B, S)
+    out = attn_core(q, kg, vg, q_pos, k_pos, acfg.window)
+    y = b.dense("wo", out)
+    return y, {"k": kp, "v": vp}
 
 
 # ---------------------------------------------------------------------------

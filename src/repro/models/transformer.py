@@ -168,16 +168,109 @@ def abstract_cache(cfg: ArchConfig, B: int, capacity: int, dtype=jnp.bfloat16):
 
 
 # ---------------------------------------------------------------------------
+# paged KV pool (serving; repro.serve / DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# Instead of one (B, capacity) buffer per request batch, serving keeps a
+# shared pool of fixed-size pages per attention slot and a per-request page
+# table (host side: repro.serve.paged_cache).  Pools are allocated with
+# ``n_pages + 1`` physical pages: the extra LAST page is the dump page that
+# inactive decode slots write into (same trick as the MoE overflow slot), so
+# the decode step runs at a fixed batch width with no scatter corruption.
+
+def check_paged_support(cfg: ArchConfig) -> None:
+    """Paged serving covers standard (GQA) attention slots; MLA's compressed
+    cache and Mamba's recurrent state need their own paging story (ROADMAP)."""
+    if cfg.frontend is not None:
+        raise ValueError("paged serving is text-decode only (frontend archs "
+                         "serve through the monolithic path)")
+    for g in cfg.groups:
+        for slot in g.slots:
+            if slot.mixer == "mamba":
+                raise ValueError("paged serving does not support mamba slots")
+            if slot.mixer == "attn" and slot.attn.is_mla:
+                raise ValueError("paged serving does not support MLA slots")
+
+
+def _slot_paged_pool(slot: LayerCfg, cfg: ArchConfig, reps: int, n_pages: int,
+                     page_size: int, dtype) -> dict | None:
+    if slot.mixer != "attn":
+        return None
+    a = slot.attn
+    return {"k": jnp.zeros((reps, n_pages + 1, page_size, a.n_kv_heads,
+                            a.head_dim), dtype),
+            "v": jnp.zeros((reps, n_pages + 1, page_size, a.n_kv_heads,
+                            a.head_dim), dtype)}
+
+
+def init_paged_pool(cfg: ArchConfig, n_pages: int, page_size: int,
+                    dtype=jnp.bfloat16):
+    """Per-attention-slot page pools (+1 dump page; see module comment)."""
+    check_paged_support(cfg)
+    pool: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        pool[f"g{gi}"] = {f"s{si}": _slot_paged_pool(slot, cfg, g.reps,
+                                                     n_pages, page_size, dtype)
+                          for si, slot in enumerate(g.slots)}
+    return pool
+
+
+def abstract_paged_pool(cfg: ArchConfig, n_pages: int, page_size: int,
+                        dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_paged_pool(cfg, n_pages, page_size,
+                                                  dtype))
+
+
+def write_prefill_to_pages(cfg: ArchConfig, cache: Any, pool: Any,
+                           table: jax.Array, page_size: int) -> Any:
+    """Scatter a freshly prefilled monolithic cache into pool pages.
+
+    ``cache``: the (Bg, T)-shaped tree a prefill ``forward`` just filled;
+    ``table``: (Bg, pages) int32 page rows for the Bg admitted requests.
+    Prefill logits never read the cache layout (the T > 1 path attends the
+    raw k/v), so prefill-then-scatter is bitwise the monolithic prefill.
+    """
+    out: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        gk = f"g{gi}"
+        out[gk] = {}
+        for si, slot in enumerate(g.slots):
+            sk = f"s{si}"
+            if slot.mixer != "attn":
+                out[gk][sk] = pool[gk][sk]
+                continue
+            c, p = cache[gk][sk], pool[gk][sk]
+            # prefill caches are allocated with capacity == prompt length,
+            # so slot s of the (full) ring holds absolute position s
+            T = c["k"].shape[2]
+            pos_vals = jnp.arange(T, dtype=jnp.int32)
+            phys = table[:, pos_vals // page_size]            # (Bg, T)
+            off = jnp.broadcast_to(pos_vals % page_size, phys.shape)
+            out[gk][sk] = {
+                "k": p["k"].at[:, phys, off].set(c["k"].astype(p["k"].dtype)),
+                "v": p["v"].at[:, phys, off].set(c["v"].astype(p["v"].dtype)),
+            }
+    return out
+
+
+# ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
 
 def _apply_slot(slot: LayerCfg, sb: Bundle, x: jax.Array, cache_slot,
-                pos, cfg: ArchConfig):
+                pos, cfg: ArchConfig, paged_table=None):
     new_cache = None
     if slot.mixer == "attn":
         h = L.norm(sb, "ln_attn", x, cfg.norm)
         mixer_cache = cache_slot if cache_slot is not None else None
-        if slot.attn.is_mla:
+        if paged_table is not None:
+            if slot.attn.is_mla:
+                raise ValueError("paged decode does not support MLA slots")
+            y, new_cache = L.paged_attention(
+                sb, h, slot.attn, pos, mixer_cache, paged_table,
+                cfg.rope_theta,
+                pos_kind="rope" if cfg.pos == "rope" else "none")
+        elif slot.attn.is_mla:
             y, new_cache = L.mla_attention(sb, h, slot.attn, pos, mixer_cache,
                                            cfg.rope_theta)
         else:
@@ -185,6 +278,8 @@ def _apply_slot(slot: LayerCfg, sb: Bundle, x: jax.Array, cache_slot,
                                        cfg.rope_theta,
                                        pos_kind="rope" if cfg.pos == "rope" else "none")
         x = x + y
+    elif slot.mixer == "mamba" and paged_table is not None:
+        raise ValueError("paged decode does not support mamba slots")
     elif slot.mixer == "mamba":
         h = L.norm(sb, "ln_attn", x, cfg.norm)
         y, new_cache = L.mamba(sb, h, slot.mamba, cache_slot)
@@ -204,7 +299,8 @@ def _apply_slot(slot: LayerCfg, sb: Bundle, x: jax.Array, cache_slot,
 
 def forward(cfg: ArchConfig, params: Any, batch: dict, *,
             sub: Any = None, pert: Pert | None = None,
-            cache: Any = None, pos=0, kernel_backend: str | None = None):
+            cache: Any = None, pos=0, kernel_backend: str | None = None,
+            paged_table: jax.Array | None = None):
     """Run the decoder.  Returns (logits, new_cache, aux_loss).
 
     batch: {"tokens": (B, T) int32, optional "embeds": (B, P, edim)} —
@@ -212,7 +308,13 @@ def forward(cfg: ArchConfig, params: Any, batch: dict, *,
     projection.  ``pos`` is the absolute position of tokens[:, 0].
     ``kernel_backend`` picks the implementation of the perturbed matmuls
     (None -> process default; see repro.kernels.ops / DESIGN.md §7).
+
+    With ``paged_table`` set (the repro.serve decode path, DESIGN.md §10),
+    ``cache`` is a paged pool tree (:func:`init_paged_pool`), ``pos`` is a
+    per-request (B,) int32 position vector, T must be 1, and attention runs
+    :func:`repro.models.layers.paged_attention` against the (B, Pb) table.
     """
+    paged = paged_table is not None
     root = Bundle.make(params, sub, pert, kernel_backend)
     be = root["embed"]
     tokens = batch["tokens"]
@@ -222,12 +324,16 @@ def forward(cfg: ArchConfig, params: Any, batch: dict, *,
         xf = root["frontend"].dense("proj", batch["embeds"].astype(x.dtype))
         x = jnp.concatenate([xf, x], axis=1)
     T = x.shape[1]
-    q_pos = pos + jnp.arange(T)
+    if paged:
+        q_pos = jnp.asarray(pos)[:, None] + jnp.arange(T)    # (B, T)
+    else:
+        q_pos = pos + jnp.arange(T)
 
     if cfg.pos == "learned":
         x = x + be.embed("pos", jnp.clip(q_pos, 0, LEARNED_POS_LEN - 1))
     elif cfg.pos == "sinusoidal":
-        x = x + L.sinusoidal_pos(q_pos, cfg.d_model)[None].astype(x.dtype)
+        pe = L.sinusoidal_pos(q_pos, cfg.d_model)
+        x = x + (pe if paged else pe[None]).astype(x.dtype)
 
     if cfg.residual_replicated:
         from jax.sharding import PartitionSpec as _P
@@ -255,7 +361,8 @@ def forward(cfg: ArchConfig, params: Any, batch: dict, *,
                 sb = Bundle(pslice[sk], _child(guv, sk), _child(ijslice, sk),
                             _child(zvslice, sk), scale, kb)
                 cslot = cslice[sk] if cslice is not None else None
-                xc, nc, aux = _apply_slot(slot, sb, xc, cslot, pos, cfg)
+                xc, nc, aux = _apply_slot(slot, sb, xc, cslot, pos, cfg,
+                                          paged_table=paged_table)
                 ncs[sk] = nc
             return (xc, aux_c + aux), ncs
 

@@ -1,0 +1,16 @@
+"""Churn-tolerant continuous-batching decode over live seed-reconstructed
+weights (DESIGN.md §10)."""
+from repro.serve.bridge import LiveUpdateBridge
+from repro.serve.paged_cache import PageAllocator, bucket_pages, pages_needed
+from repro.serve.scheduler import (SAMPLING_KINDS, Request, Scheduler,
+                                   ServeConfig)
+from repro.serve.server import DecodeServer
+from repro.serve.sim import ServeSwarmSim
+
+__all__ = [
+    "LiveUpdateBridge",
+    "PageAllocator", "bucket_pages", "pages_needed",
+    "SAMPLING_KINDS", "Request", "Scheduler", "ServeConfig",
+    "DecodeServer",
+    "ServeSwarmSim",
+]

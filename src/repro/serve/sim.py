@@ -1,0 +1,171 @@
+"""Churn-tolerant serving swarm on the repro.sim virtual clock (DESIGN.md §10).
+
+Trainer nodes flood one SubCGE message each per virtual train step through a
+real :class:`~repro.core.transport.FloodTransport` (bytes charged to its
+CommLedger); server nodes run :class:`~repro.serve.server.DecodeServer`
+steps at their own cadence, folding whatever the flood has delivered at
+each decode-step boundary.  A step-indexed
+:class:`~repro.topology.dynamic.ChurnSchedule` (mapped onto virtual time by
+``train_period``) takes servers offline mid-decode: *leave* suspends their
+in-flight requests back onto the queue, *join* re-admits them through the
+normal admission path — pages re-reserved from the free list, KV rebuilt by
+re-prefill — while the bridge catches the weights up from the transport's
+anti-entropy.
+
+No wall clocks anywhere (SF001/SF002): a run is a pure function of
+(configs, request script, churn schedule), so running it twice yields
+bitwise-identical token streams and byte ledgers — the replay oracle
+``tests/test_serve.py`` pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.messages import Message
+from repro.core.seeds import client_seed
+from repro.core.transport import FloodTransport
+from repro.models import params as plib
+from repro.models import transformer as tf
+from repro.serve.bridge import LiveUpdateBridge
+from repro.serve.scheduler import Request, ServeConfig
+from repro.serve.server import DecodeServer
+from repro.sim.events import RANK_CHURN, EventQueue, churn_event, step_event
+from repro.topology import graphs
+
+#: ``client`` id carried by the collective trainer-tick STEP event.
+TRAINER_TICK = -1
+
+
+class ServeSwarmSim:
+    """Trainers flood; servers decode under live updates; churn replays."""
+
+    def __init__(self, cfg, scfg, serve_cfg: ServeConfig, *,
+                 n_trainers: int = 2, n_servers: int = 1,
+                 train_steps: int = 4, global_seed: int = 0,
+                 coef_fn: Callable[[int, int], float] | None = None,
+                 churn=None, train_period: float = 1.0,
+                 serve_period: float = 0.25, graph=None,
+                 flood_k: int | None = None, max_events: int = 100_000):
+        self.cfg = cfg
+        self.n_trainers = n_trainers
+        self.n = n_trainers + n_servers
+        self.train_steps = train_steps
+        self.global_seed = global_seed
+        self.coef_fn = coef_fn if coef_fn is not None \
+            else (lambda t, i: 0.01 / (1 + t + i))
+        self.churn = churn
+        self.train_period = train_period
+        self.serve_period = serve_period
+        self.max_events = max_events
+        g = graph if graph is not None else graphs.ring(self.n)
+        self.transport = FloodTransport(g, flood_k=flood_k)
+        params = plib.init_params(tf.arch_spec(cfg), 0, serve_cfg.param_dtype)
+        self.servers: dict[int, DecodeServer] = {}
+        for node in range(n_trainers, self.n):
+            bridge = LiveUpdateBridge(cfg, scfg, global_seed, node)
+            self.servers[node] = DecodeServer(cfg, params, serve_cfg,
+                                              bridge=bridge)
+        self.online = {node: True for node in self.servers}
+        self._gen = {node: 0 for node in self.servers}
+        if churn is not None:
+            bad = sorted({n for ev in churn.events for n in ev.nodes
+                          if n not in self.servers})
+            if bad:
+                raise ValueError(f"churn may only target server nodes "
+                                 f"{sorted(self.servers)}, got {bad}")
+
+    def submit(self, node: int, req: Request) -> None:
+        self.servers[node].submit(req)
+
+    # -- event handlers -------------------------------------------------------
+
+    def _trainer_tick(self, t: int) -> None:
+        """One collective train step: every trainer floods its (seed, coef,
+        step) message; every online server's bridge buffers its inbox row
+        (anti-entropy catch-up from an earlier rejoin rides the same padded
+        matrices — FloodTransport prepends its pending payload)."""
+        msgs = [(i, Message(seed=int(client_seed(self.global_seed, t, i)),
+                            coef=float(self.coef_fn(t, i)), origin=i, step=t))
+                for i in range(self.n_trainers)]
+        active = np.array([i < self.n_trainers or self.online[i]
+                           for i in range(self.n)])
+        inbox = self.transport.exchange(msgs, t, active)
+        for node, srv in self.servers.items():
+            if self.online[node]:
+                srv.bridge.ingest(inbox)
+
+    def _server_step(self, ev, q: EventQueue) -> None:
+        node = ev.client
+        if ev.client_gen != self._gen[node] or not self.online[node]:
+            return                      # cancelled by a later churn event
+        srv = self.servers[node]
+        srv.step()
+        if not srv.sched.done:
+            q.push(step_event(ev.time + self.serve_period, node,
+                              ev.step + 1, self._gen[node]))
+
+    def _handle_churn(self, ev, q: EventQueue) -> None:
+        evs = self.churn.events_at(ev.step)
+        for e in evs:
+            if e.kind == "leave":
+                for node in e.nodes:
+                    if self.online[node]:
+                        self.servers[node].suspend()
+                        self.online[node] = False
+                        self._gen[node] += 1
+        self.transport.apply_churn(evs)
+        for e in evs:
+            if e.kind == "join":
+                for node in e.nodes:
+                    if not self.online[node]:
+                        self.online[node] = True
+                        self._gen[node] += 1
+                        q.push(step_event(ev.time + self.serve_period, node,
+                                          0, self._gen[node]))
+
+    # -- driver ---------------------------------------------------------------
+
+    def run(self) -> dict:
+        q = EventQueue()
+        for t in range(self.train_steps):
+            q.push(step_event(t * self.train_period, TRAINER_TICK, t))
+        for node in self.servers:
+            q.push(step_event(self.serve_period, node, 0, self._gen[node]))
+        if self.churn is not None:
+            for s in sorted({ev.step for ev in self.churn.events}):
+                q.push(churn_event(s * self.train_period, s))
+
+        n_events = 0
+        while q:
+            ev = q.pop()
+            n_events += 1
+            if n_events > self.max_events:
+                raise RuntimeError(f"serve sim exceeded {self.max_events} "
+                                   f"events — runaway schedule?")
+            if ev.rank == RANK_CHURN:
+                self._handle_churn(ev, q)
+            elif ev.client == TRAINER_TICK:
+                self._trainer_tick(ev.step)
+            else:
+                self._server_step(ev, q)
+
+        stuck = [node for node, srv in self.servers.items()
+                 if not srv.sched.done]
+        if stuck:
+            raise RuntimeError(f"servers {stuck} ended offline with "
+                               f"unfinished requests — extend the schedule "
+                               f"or rejoin them before the run drains")
+
+        tokens: dict[int, list[int]] = {}
+        for node, srv in self.servers.items():
+            for rid, toks in srv.results.items():
+                if rid in tokens:
+                    raise ValueError(f"request id {rid} served by two nodes")
+                tokens[rid] = toks
+        return {"tokens": tokens,
+                "ledger": dataclasses.asdict(self.transport.ledger),
+                "servers": {node: srv.stats()
+                            for node, srv in self.servers.items()}}

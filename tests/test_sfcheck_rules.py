@@ -289,6 +289,23 @@ def test_sf005_gossip_module_functions_fire():
     assert [d.code for d in ds] == ["SF005"]
 
 
+def test_sf005_serve_scope_fires_and_transport_calls_stay_clean():
+    # the serving swarm rides the flood: a server injecting directly would
+    # receive updates no ledger billed — serve/ is in scope
+    ds = diags({"src/repro/core/transport.py": _TRANSPORT,
+                "src/repro/serve/sneaky_sim.py":
+                    "def tick(net, msg):\n    net.inject(0, msg)\n"})
+    assert [d.code for d in ds] == ["SF005"]
+    # calling Transport *methods* (exchange / apply_churn) is the sanctioned
+    # path — those charge the CommLedger themselves
+    ds = diags({"src/repro/core/transport.py": _TRANSPORT,
+                "src/repro/serve/sim.py":
+                    "class ServeSwarmSim:\n"
+                    "    def tick(self, transport, msgs, t, active):\n"
+                    "        return transport.exchange(msgs, t, active)\n"})
+    assert ds == []
+
+
 def test_sf005_substrate_and_tests_are_out_of_scope():
     # flood.py implements the primitives; tests drive networks directly
     ds = diags({"src/repro/core/flood.py":
