@@ -1,0 +1,80 @@
+"""sfcheck self-time bench (ISSUE 10): whole-tree analysis must stay fast.
+
+The v2 engine builds a whole-program dataflow index (call graph, traced
+fixpoint, donation fixpoint) before any rule runs, so this bench guards the
+thing that could silently rot: a fixpoint that stops converging quickly, or
+a rule that goes quadratic in tree size.  It runs the full production sweep
+— all ten rules over ``src tests benchmarks examples`` — three times and
+takes the best wall time (robust to runner noise), asserting the tree is
+clean and the sweep fits the CI budget.
+
+Stdlib only: no jax, no numpy — this is the one bench that must run on a
+bare interpreter, because CI's lint job has no accelerator stack.
+
+Emits ``BENCH_sfcheck.json``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_sfcheck.py \
+        [--budget-s 10] [--out BENCH_sfcheck.json]
+"""
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.analysis.engine import check_paths
+
+ROOT = Path(__file__).resolve().parents[1]
+TREE = ("src", "tests", "benchmarks", "examples")
+
+
+def timed_sweep():
+    t0 = time.perf_counter()
+    diags = check_paths([ROOT / p for p in TREE], root=ROOT)
+    return time.perf_counter() - t0, diags
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--budget-s", type=float, default=10.0,
+                        help="max allowed best-of-3 sweep time (default 10s)")
+    parser.add_argument("--out", default="BENCH_sfcheck.json")
+    args = parser.parse_args(argv)
+
+    times, diags = [], []
+    for _ in range(3):
+        dt, diags = timed_sweep()
+        times.append(dt)
+    best = min(times)
+
+    n_files = sum(1 for p in TREE
+                  for f in (ROOT / p).rglob("*.py") if f.is_file())
+    result = {
+        "bench": "sfcheck",
+        "files": n_files,
+        "findings": len(diags),
+        "best_s": round(best, 4),
+        "times_s": [round(t, 4) for t in times],
+        "budget_s": args.budget_s,
+    }
+    Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps(result, indent=2))
+
+    if diags:
+        for d in diags:
+            print(f"{d.path}:{d.line}:{d.col}: {d.code} {d.message}",
+                  file=sys.stderr)
+        print("FAIL: tree is not clean", file=sys.stderr)
+        return 1
+    if best > args.budget_s:
+        print(f"FAIL: best sweep {best:.2f}s exceeds budget "
+              f"{args.budget_s:.1f}s", file=sys.stderr)
+        return 1
+    print(f"OK: {n_files} files clean in {best:.2f}s "
+          f"(budget {args.budget_s:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,715 @@
+"""Whole-program dataflow facts for sfcheck (DESIGN.md §8).
+
+PR 7's rules were per-file AST visitors; every one of the repo's worst
+historical bugs (receiver-epoch replay, per-trace backend sniffing, the
+per-token jit-in-loop recompile) was *interprocedural* — visible only by
+following a value or a call across function and module boundaries.  This
+module is the project-level half of the engine:
+
+* :class:`FileSummary`  — everything a rule repeatedly recomputed per
+  file (import map, parent map, rebound globals, attribute loads,
+  identifier string constants), computed once and cached.
+* :class:`FunctionInfo` — one function with a module-qualified name
+  (``repro.core.subcge.apply_A``, ``repro.serve.server.DecodeServer.step``,
+  ``repro.dtrain.methods.seedflood.SeedFloodMethod.init.replay_batched``),
+  its params, jit decoration / donation spec, and its call sites.
+* :class:`ProjectDataflow` — the cross-module indexes: a call graph with
+  *confident* edges only (lexical scope, module-level defs, import
+  following within the project, ``self.method(...)`` with base-class
+  walk, ``self._x = fn`` attribute aliases), plus two summary fixpoints:
+
+  - ``traced``  — transitive **called-under-jit**: jit/pmap-decorated or
+    jit-wrapped functions, everything they (transitively) call, and
+    their lexically nested defs.  SF002 checks host-state reads against
+    this set instead of per-file decorator scans.
+  - donation   — **donates-through**: a function that passes its own
+    parameter at a donated position of a donating callee invalidates
+    that argument for *its* callers too (SF008).
+
+* :class:`LocalFlows` — per-function **value-flows-from** facts: for a
+  name or expression, the set of origins (parameters, attribute reads,
+  constants) it may derive from, with scalar-substitution constructors
+  (``np.where``/``np.full``/ternaries) tagged so SF010 can spot a
+  receiver step being broadcast over a payload's sender steps.
+
+Resolution is deliberately approximate but *sound in the direction each
+rule needs*: unresolvable calls simply contribute no edge (rules stay
+quiet) rather than guessing.  Everything is stdlib-only ``ast``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import TYPE_CHECKING, Iterable
+
+from repro.analysis.rules.common import (canonical, dotted, import_map,
+                                         parent_map)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from repro.analysis.engine import Project, SourceFile
+
+#: Callables whose first argument becomes a traced program.
+JIT_WRAPPERS = ("jax.jit", "jax.pmap")
+_PARTIALS = ("functools.partial", "partial")
+
+
+def module_name(parts: tuple[str, ...]) -> str:
+    """Dotted module name for a repo-relative path: ``src/repro/core/flood.py``
+    -> ``repro.core.flood`` (the importable name), ``tests/test_x.py`` ->
+    ``tests.test_x`` (a stable pseudo-module for non-package files)."""
+    segs = list(parts)
+    if segs and segs[0] == "src":
+        segs = segs[1:]
+    if segs and segs[-1].endswith(".py"):
+        segs[-1] = segs[-1][: -len(".py")]
+    if segs and segs[-1] == "__init__":
+        segs = segs[:-1]
+    return ".".join(segs)
+
+
+def rebound_globals(tree: ast.Module) -> set[str]:
+    """Module-level names that are *mutable state*: assigned more than
+    once at module scope, or assigned anywhere under a ``global``
+    declaration.  Single-assignment module constants don't count."""
+    counts: dict[str, int] = {}
+    for stmt in tree.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = [t for t in stmt.targets if isinstance(t, ast.Name)]
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)) \
+                and isinstance(stmt.target, ast.Name):
+            targets = [stmt.target]
+        for t in targets:
+            counts[t.id] = counts.get(t.id, 0) + 1
+    rebound = {n for n, c in counts.items() if c > 1}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            rebound.update(n for n in node.names if n in counts)
+    return rebound
+
+
+def _canonical_of(node: ast.AST, imports: dict[str, str]) -> str | None:
+    c = dotted(node)
+    if c is None:
+        return None
+    head, _, rest = c.partition(".")
+    base = imports.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def is_jit_call(call: ast.Call, imports: dict[str, str]) -> bool:
+    """True when ``call`` is ``jax.jit(...)`` / ``jax.pmap(...)``."""
+    return _canonical_of(call.func, imports) in JIT_WRAPPERS
+
+
+def jit_decoration(dec: ast.AST, imports: dict[str, str],
+                   params: list[str]) -> tuple[int, ...] | None:
+    """``None`` when the decorator does not jit the function; otherwise the
+    tuple of donated positional indices (usually empty).  Handles bare
+    ``@jax.jit``, ``@jax.jit(...)`` and ``@functools.partial(jax.jit, ...)``.
+    """
+    c = _canonical_of(dec, imports)
+    if c in JIT_WRAPPERS or c == "jit":
+        return ()
+    if isinstance(dec, ast.Call):
+        c = _canonical_of(dec.func, imports)
+        if c in JIT_WRAPPERS:
+            return donate_positions(dec.keywords, params)
+        if c in _PARTIALS and dec.args:
+            inner = _canonical_of(dec.args[0], imports)
+            if inner in JIT_WRAPPERS or inner == "jit":
+                return donate_positions(dec.keywords, params)
+    return None
+
+
+def donate_positions(keywords: Iterable[ast.keyword],
+                     params: list[str]) -> tuple[int, ...]:
+    """Donated positional indices from ``donate_argnums=``/``donate_argnames=``
+    keyword literals (non-literal specs are ignored: no edge, no finding)."""
+    out: list[int] = []
+    for kw in keywords:
+        if kw.arg == "donate_argnums":
+            vals = (kw.value.elts if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value])
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    out.append(v.value)
+        elif kw.arg == "donate_argnames":
+            vals = (kw.value.elts if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value])
+            for v in vals:
+                if isinstance(v, ast.Constant) and v.value in params:
+                    out.append(params.index(v.value))
+    return tuple(sorted(set(out)))
+
+
+def scope_nodes(fn: ast.AST, *, into_lambdas: bool = True) -> Iterable[ast.AST]:
+    """Nodes of one function's executable scope: descends into lambdas and
+    comprehensions (they run when the function runs) but not into nested
+    ``def``/``class`` bodies (separate scopes with their own summaries)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if isinstance(node, ast.Lambda) and not into_lambdas:
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def param_names(args: ast.arguments) -> list[str]:
+    out = [a.arg for a in args.posonlyargs + args.args]
+    out.extend(a.arg for a in args.kwonlyargs)
+    if args.vararg:
+        out.append(args.vararg.arg)
+    if args.kwarg:
+        out.append(args.kwarg.arg)
+    return out
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """Summary of one function definition (module-qualified)."""
+
+    qname: str
+    name: str
+    fsum: "FileSummary"
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    cls: ast.ClassDef | None
+    parent: "FunctionInfo | None"
+    params: list[str]
+    jit_decorated: bool = False
+    deco_donated: tuple[int, ...] = ()
+    wrap_donated: tuple[int, ...] = ()        # via g = jax.jit(f, donate_...)
+    through_donated: tuple[int, ...] = ()     # fixpoint: passes own param on
+    nested: dict[str, "FunctionInfo"] = dataclasses.field(default_factory=dict)
+    #: local ``name = jax.jit(fn)`` aliases, resolved to the wrapped fn
+    aliases: dict[str, "FunctionInfo"] = dataclasses.field(default_factory=dict)
+    calls: list[ast.Call] = dataclasses.field(default_factory=list)
+    refs: list[ast.Name] = dataclasses.field(default_factory=list)
+    edges: list[tuple[ast.Call, "FunctionInfo"]] = \
+        dataclasses.field(default_factory=list)
+    ref_edges: list["FunctionInfo"] = dataclasses.field(default_factory=list)
+
+    def donated(self) -> tuple[int, ...]:
+        """All donated positional indices of this function's own params."""
+        merged = set(self.deco_donated) | set(self.wrap_donated) \
+            | set(self.through_donated)
+        return tuple(sorted(merged))
+
+
+class FileSummary:
+    """Per-file facts every rule used to recompute, built exactly once."""
+
+    def __init__(self, file: "SourceFile"):
+        self.file = file
+        self.module = module_name(file.parts)
+        self.imports = import_map(file.tree)
+        self.parents = parent_map(file.tree)
+        self.rebound_globals = rebound_globals(file.tree)
+        self.attr_loads: set[str] = set()
+        self.str_consts: set[str] = set()
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.ctx, ast.Load):
+                self.attr_loads.add(node.attr)
+            elif isinstance(node, ast.Constant) \
+                    and isinstance(node.value, str) \
+                    and node.value.isidentifier():
+                self.str_consts.add(node.value)
+        self.functions: list[FunctionInfo] = []
+        self.module_funcs: dict[str, FunctionInfo] = {}
+        #: jit-wrap call records: (enclosing FunctionInfo | None, call node)
+        self.jit_wraps: list[tuple[FunctionInfo | None, ast.Call]] = []
+        #: ``name = jax.jit(fn)`` records: (scope fi | None, name, call node)
+        self.jit_wrap_aliases: list[tuple[FunctionInfo | None, str,
+                                          ast.Call]] = []
+        #: module-scope jit-wrap aliases resolved to the wrapped function
+        self.module_alias_funcs: dict[str, FunctionInfo] = {}
+        #: raw ``self.X = <Name>`` records: (method info, attr, value name)
+        self.self_assigns: list[tuple[FunctionInfo, str, ast.AST]] = []
+        self._build()
+
+    # -- construction ----------------------------------------------------------
+
+    def _build(self) -> None:
+        self._visit_body(self.file.tree.body, cls=None, parent=None,
+                         prefix=self.module)
+        # module-scope jit wrap calls (g = jax.jit(f) at import time)
+        for node in scope_nodes(self.file.tree):
+            if isinstance(node, ast.Call) and is_jit_call(node, self.imports):
+                self.jit_wraps.append((None, node))
+            elif self._is_wrap_alias(node):
+                self.jit_wrap_aliases.append(
+                    (None, node.targets[0].id, node.value))
+
+    def _visit_body(self, body, cls, parent, prefix) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._visit_function(stmt, cls, parent, prefix)
+            elif isinstance(stmt, ast.ClassDef):
+                self._visit_body(stmt.body, cls=stmt, parent=None,
+                                 prefix=f"{prefix}.{stmt.name}")
+            elif isinstance(stmt, (ast.If, ast.Try, ast.With, ast.For,
+                                   ast.While)):
+                for sub in ast.iter_child_nodes(stmt):
+                    if isinstance(sub, ast.stmt):
+                        self._visit_body([sub], cls, parent, prefix)
+
+    def _visit_function(self, node, cls, parent, prefix) -> None:
+        params = param_names(node.args)
+        fi = FunctionInfo(qname=f"{prefix}.{node.name}", name=node.name,
+                          fsum=self, node=node, cls=cls, parent=parent,
+                          params=params)
+        for dec in node.decorator_list:
+            spec = jit_decoration(dec, self.imports, params)
+            if spec is not None:
+                fi.jit_decorated = True
+                fi.deco_donated = tuple(sorted(set(fi.deco_donated)
+                                               | set(spec)))
+        for sub in scope_nodes(node):
+            if isinstance(sub, ast.Call):
+                fi.calls.append(sub)
+                if is_jit_call(sub, self.imports):
+                    self.jit_wraps.append((fi, sub))
+                for arg in list(sub.args) + [kw.value for kw in sub.keywords]:
+                    if isinstance(arg, ast.Name):
+                        fi.refs.append(arg)
+            elif self._is_wrap_alias(sub):
+                self.jit_wrap_aliases.append(
+                    (fi, sub.targets[0].id, sub.value))
+            elif isinstance(sub, ast.Assign) and cls is not None \
+                    and len(sub.targets) == 1 \
+                    and isinstance(sub.targets[0], ast.Attribute) \
+                    and isinstance(sub.targets[0].value, ast.Name) \
+                    and sub.targets[0].value.id == "self":
+                self.self_assigns.append((fi, sub.targets[0].attr, sub.value))
+        self.functions.append(fi)
+        if parent is not None:
+            parent.nested[node.name] = fi
+        elif cls is None:
+            self.module_funcs[node.name] = fi
+        # nested defs (their scope_nodes walk skipped them above)
+        for stmt in ast.walk(node):
+            if stmt is node:
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and self._directly_nested_in(stmt, node):
+                self._visit_function(stmt, cls=None, parent=fi,
+                                     prefix=fi.qname)
+
+    def _is_wrap_alias(self, node) -> bool:
+        """``name = jax.jit(fn, ...)`` with ``fn`` a bare name."""
+        return (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and is_jit_call(node.value, self.imports)
+                and bool(node.value.args)
+                and isinstance(node.value.args[0], ast.Name))
+
+    def _directly_nested_in(self, stmt, fn) -> bool:
+        """True when ``stmt``'s nearest enclosing def is exactly ``fn``."""
+        cur = self.parents.get(stmt)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur is fn
+            cur = self.parents.get(cur)
+        return False
+
+    def enclosing_function(self, node: ast.AST) -> ast.AST | None:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+
+class ProjectDataflow:
+    """Cross-module name resolution, call graph, and summary fixpoints."""
+
+    def __init__(self, project: "Project"):
+        self.project = project
+        self.summaries: dict[str, FileSummary] = {}
+        for f in project.parsed():
+            self.summaries[f.rel] = FileSummary(f)
+        self.index: dict[str, FunctionInfo] = {}
+        self._by_node: dict[int, FunctionInfo] = {}
+        for fsum in self.summaries.values():
+            for fi in fsum.functions:
+                self.index[fi.qname] = fi
+                self._by_node[id(fi.node)] = fi
+        self.attr_aliases: dict[tuple[str, str], FunctionInfo] = {}
+        self._link_attr_aliases()
+        self.traced_roots: set[str] = set()
+        self._link_wrap_aliases()
+        self._link_jit_wraps()
+        self._resolve_edges()
+        self.traced: set[str] = self._traced_fixpoint()
+        self._donation_fixpoint()
+        self._flows: dict[str, LocalFlows] = {}
+
+    # -- public API ------------------------------------------------------------
+
+    def summary(self, file: "SourceFile") -> FileSummary:
+        return self.summaries[file.rel]
+
+    def file_summaries(self) -> list[FileSummary]:
+        return [self.summaries[f.rel] for f in self.project.parsed()]
+
+    def functions(self) -> list[FunctionInfo]:
+        return [fi for fsum in self.file_summaries() for fi in fsum.functions]
+
+    def info_of(self, node: ast.AST) -> FunctionInfo | None:
+        return self._by_node.get(id(node))
+
+    def flows(self, fi: FunctionInfo) -> "LocalFlows":
+        lf = self._flows.get(fi.qname)
+        if lf is None:
+            lf = LocalFlows(fi)
+            self._flows[fi.qname] = lf
+        return lf
+
+    def is_traced(self, fi: FunctionInfo) -> bool:
+        return fi.qname in self.traced
+
+    # -- name resolution -------------------------------------------------------
+
+    def resolve_name(self, name: str, fi: FunctionInfo | None,
+                     fsum: FileSummary) -> FunctionInfo | None:
+        """Lexical resolution of a bare name at a site inside ``fi`` (or at
+        module scope of ``fsum``): nested defs of enclosing functions, then
+        module-level defs, then imports followed into the project."""
+        cur = fi
+        while cur is not None:
+            child = cur.nested.get(name) or cur.aliases.get(name)
+            if child is not None:
+                return child
+            cur = cur.parent
+        mod_fn = fsum.module_funcs.get(name) \
+            or fsum.module_alias_funcs.get(name)
+        if mod_fn is not None:
+            return mod_fn
+        target = fsum.imports.get(name)
+        if target is not None:
+            return self.index.get(target)
+        return None
+
+    def resolve_call(self, call: ast.Call, fi: FunctionInfo | None,
+                     fsum: FileSummary) -> FunctionInfo | None:
+        func = call.func
+        if isinstance(func, ast.Name):
+            return self.resolve_name(func.id, fi, fsum)
+        if isinstance(func, ast.Attribute):
+            d = dotted(func)
+            if d is None:
+                return None
+            parts = d.split(".")
+            if parts[0] == "self" and len(parts) == 2 and fi is not None \
+                    and fi.cls is not None:
+                return self.resolve_method(fsum, fi.cls, parts[1])
+            c = canonical(func, fsum.imports)
+            if c is not None:
+                return self.index.get(c)
+        return None
+
+    def resolve_method(self, fsum: FileSummary, cls: ast.ClassDef,
+                       meth: str, _seen: set[str] | None = None
+                       ) -> FunctionInfo | None:
+        """``self.meth`` resolution: own class, ``self._x = fn`` attribute
+        aliases, then base classes by name across the project (the SF005
+        class-hierarchy pass, walked upward)."""
+        _seen = set() if _seen is None else _seen
+        cls_q = f"{fsum.module}.{cls.name}"
+        if cls_q in _seen:
+            return None
+        _seen.add(cls_q)
+        hit = self.index.get(f"{cls_q}.{meth}")
+        if hit is not None:
+            return hit
+        alias = self.attr_aliases.get((cls_q, meth))
+        if alias is not None:
+            return alias
+        for b in cls.bases:
+            bname = b.id if isinstance(b, ast.Name) else \
+                (b.attr if isinstance(b, ast.Attribute) else None)
+            if bname is None:
+                continue
+            for f2, node2 in self.project.class_index().get(bname, ()):
+                fsum2 = self.summaries.get(f2.rel)
+                if fsum2 is None:
+                    continue
+                hit = self.resolve_method(fsum2, node2, meth, _seen)
+                if hit is not None:
+                    return hit
+        return None
+
+    # -- construction passes ---------------------------------------------------
+
+    def _link_attr_aliases(self) -> None:
+        for fsum in self.file_summaries():
+            for fi, attr, value in fsum.self_assigns:
+                target = None
+                if isinstance(value, ast.Name):
+                    target = self.resolve_name(value.id, fi, fsum)
+                elif isinstance(value, ast.Call) \
+                        and is_jit_call(value, fsum.imports) \
+                        and value.args and isinstance(value.args[0], ast.Name):
+                    target = self.resolve_name(value.args[0].id, fi, fsum)
+                    if target is not None:
+                        spec = donate_positions(value.keywords, target.params)
+                        target.wrap_donated = tuple(sorted(
+                            set(target.wrap_donated) | set(spec)))
+                if target is not None and fi.cls is not None:
+                    cls_q = f"{fsum.module}.{fi.cls.name}"
+                    self.attr_aliases[(cls_q, attr)] = target
+
+    def _link_wrap_aliases(self) -> None:
+        """``upd = jax.jit(f, ...)`` binds ``upd`` as a callable alias of
+        ``f`` (module scope or function-local), so call sites through the
+        alias resolve to the wrapped function — donations included."""
+        for fsum in self.file_summaries():
+            for fi, name, call in fsum.jit_wrap_aliases:
+                target = self.resolve_name(call.args[0].id, fi, fsum)
+                if target is None:
+                    continue
+                if fi is None:
+                    fsum.module_alias_funcs[name] = target
+                else:
+                    fi.aliases[name] = target
+
+    def _link_jit_wraps(self) -> None:
+        """``jax.jit(f, ...)`` call forms: ``f`` becomes a traced root and
+        collects any ``donate_argnums`` literal into its donation spec."""
+        for fsum in self.file_summaries():
+            for fi, call in fsum.jit_wraps:
+                if not call.args or not isinstance(call.args[0], ast.Name):
+                    continue
+                target = self.resolve_name(call.args[0].id, fi, fsum)
+                if target is None:
+                    continue
+                self.traced_roots.add(target.qname)
+                spec = donate_positions(call.keywords, target.params)
+                target.wrap_donated = tuple(sorted(
+                    set(target.wrap_donated) | set(spec)))
+
+    def _resolve_edges(self) -> None:
+        for fsum in self.file_summaries():
+            for fi in fsum.functions:
+                for call in fi.calls:
+                    target = self.resolve_call(call, fi, fsum)
+                    if target is not None:
+                        fi.edges.append((call, target))
+                for ref in fi.refs:
+                    target = self.resolve_name(ref.id, fi, fsum)
+                    if target is not None:
+                        fi.ref_edges.append(target)
+
+    def _traced_fixpoint(self) -> set[str]:
+        """Transitive called-under-jit: decorated/wrapped roots, everything
+        they confidently call or reference, and their nested defs."""
+        for fi in self.functions():
+            if fi.jit_decorated:
+                self.traced_roots.add(fi.qname)
+        traced = set(self.traced_roots)
+        frontier = [qn for qn in self.index if qn in traced]
+        while frontier:
+            fi = self.index[frontier.pop()]
+            succs = [t for _, t in fi.edges] + fi.ref_edges \
+                + list(fi.nested.values())
+            for t in succs:
+                if t.qname not in traced:
+                    traced.add(t.qname)
+                    frontier.append(t.qname)
+        return traced
+
+    def call_donations(self, call: ast.Call, fi: FunctionInfo | None,
+                       fsum: FileSummary) -> list[ast.expr]:
+        """Argument expressions of ``call`` that are donated to the callee
+        (decorator, jit-wrap, or donate-through), shifted for bound calls."""
+        callee = self.resolve_call(call, fi, fsum)
+        if callee is None:
+            return []
+        spec = callee.donated()
+        if not spec:
+            return []
+        shift = 1 if (isinstance(call.func, ast.Attribute)
+                      and callee.params[:1] == ["self"]) else 0
+        out = []
+        for pos in spec:
+            argi = pos - shift
+            if 0 <= argi < len(call.args):
+                out.append(call.args[argi])
+        return out
+
+    def _donation_fixpoint(self) -> None:
+        """Donates-through: F passing its own param at a donated position of
+        a donating callee donates that param for F's callers too."""
+        funcs = self.functions()
+        changed = True
+        while changed:
+            changed = False
+            for fi in funcs:
+                for call, _ in fi.edges:
+                    for arg in self.call_donations(call, fi, fi.fsum):
+                        if not isinstance(arg, ast.Name) \
+                                or arg.id not in fi.params:
+                            continue
+                        idx = fi.params.index(arg.id)
+                        if idx not in fi.through_donated:
+                            fi.through_donated = tuple(sorted(
+                                set(fi.through_donated) | {idx}))
+                            changed = True
+
+
+# ---------------------------------------------------------------------------
+# local value flow (value-flows-from facts)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Origin:
+    """One possible source of a value: a parameter, an attribute read, a
+    constant, or an unresolved global.  ``subst`` marks origins reached
+    through a scalar-substitution constructor (``np.where`` branches,
+    ``np.full`` fill values, ternaries) — the shape of the PR 2 bug, where
+    a receiver-local scalar was broadcast over a payload's sender steps."""
+
+    kind: str          # "param" | "attr" | "global" | "const"
+    label: str
+    subst: bool = False
+
+
+#: Call names that merely re-wrap their first argument's value.
+_WRAPPER_CALLS = {
+    "numpy.asarray", "numpy.array", "numpy.ascontiguousarray",
+    "jax.numpy.asarray", "jax.numpy.array", "numpy.int32", "numpy.int64",
+    "numpy.uint32", "numpy.float32", "numpy.float64", "jax.numpy.int32",
+    "jax.numpy.float32", "sorted", "list", "tuple",
+}
+#: Attribute method calls that re-wrap the receiver's value.
+_WRAPPER_METHODS = {"astype", "reshape", "copy", "ravel", "flatten",
+                    "tolist", "squeeze"}
+#: (canonical tail, branch arg indices) for substitution constructors.
+_SUBST_CALLS = {"where": (1, 2), "select": (1,), "full": (1,),
+                "full_like": (1,), "broadcast_to": (0,)}
+
+
+class LocalFlows:
+    """Flow-insensitive value origins for one function's scope.
+
+    The environment maps each locally assigned name to the union of the
+    origins of every expression ever assigned to it (subscript stores
+    included: ``buf[:n] = steps`` adds ``steps``'s origins to ``buf``),
+    iterated to a fixpoint so chains resolve.  Parameters of the function
+    *and of its nested defs/lambdas* count as parameter origins — a steps
+    value threaded through a vmapped lambda keeps its identity.
+    """
+
+    def __init__(self, fi: FunctionInfo):
+        self.fi = fi
+        self.imports = fi.fsum.imports
+        self.params: set[str] = set(fi.params)
+        for node in ast.walk(fi.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                self.params.update(param_names(node.args))
+        self.env: dict[str, frozenset[Origin]] = {}
+        assigns = self._collect_assigns(fi.node)
+        for _ in range(len(assigns) + 1):
+            changed = False
+            for name, value in assigns:
+                got = self.origins(value)
+                if not got <= self.env.get(name, frozenset()):
+                    self.env[name] = self.env.get(name, frozenset()) | got
+                    changed = True
+            if not changed:
+                break
+
+    @staticmethod
+    def _collect_assigns(fn) -> list[tuple[str, ast.AST]]:
+        out: list[tuple[str, ast.AST]] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    out.extend(LocalFlows._target_pairs(t, node.value))
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)) \
+                    and node.value is not None:
+                out.extend(LocalFlows._target_pairs(node.target, node.value))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                out.extend(LocalFlows._target_pairs(node.target, node.iter))
+        return out
+
+    @staticmethod
+    def _target_pairs(target, value) -> list[tuple[str, ast.AST]]:
+        if isinstance(target, ast.Name):
+            return [(target.id, value)]
+        if isinstance(target, ast.Subscript) \
+                and isinstance(target.value, ast.Name):
+            # buf[i:j] = value merges value's origins into buf
+            return [(target.value.id, value)]
+        if isinstance(target, (ast.Tuple, ast.List)):
+            if isinstance(value, (ast.Tuple, ast.List)) \
+                    and len(value.elts) == len(target.elts):
+                return [p for t, v in zip(target.elts, value.elts)
+                        for p in LocalFlows._target_pairs(t, v)]
+            return [p for t in target.elts
+                    for p in LocalFlows._target_pairs(t, value)]
+        return []
+
+    def origins(self, expr: ast.AST) -> frozenset[Origin]:
+        if isinstance(expr, ast.Name):
+            if expr.id in self.env:
+                return self.env[expr.id]
+            kind = "param" if expr.id in self.params else "global"
+            return frozenset({Origin(kind, expr.id)})
+        if isinstance(expr, ast.Attribute):
+            return frozenset({Origin("attr", expr.attr)})
+        if isinstance(expr, ast.Subscript):
+            return self.origins(expr.value)
+        if isinstance(expr, ast.Constant):
+            return frozenset({Origin("const", repr(expr.value))})
+        if isinstance(expr, ast.IfExp):
+            return self._tag(self.origins(expr.body)
+                             | self.origins(expr.orelse))
+        if isinstance(expr, ast.Call):
+            return self._call_origins(expr)
+        if isinstance(expr, (ast.BinOp,)):
+            return self.origins(expr.left) | self.origins(expr.right)
+        if isinstance(expr, ast.UnaryOp):
+            return self.origins(expr.operand)
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            out: frozenset[Origin] = frozenset()
+            for e in expr.elts:
+                out |= self.origins(e)
+            return out
+        if isinstance(expr, ast.Starred):
+            return self.origins(expr.value)
+        return frozenset()
+
+    def _call_origins(self, call: ast.Call) -> frozenset[Origin]:
+        c = canonical(call.func, self.imports)
+        tail = c.rsplit(".", 1)[-1] if c else (
+            call.func.attr if isinstance(call.func, ast.Attribute) else "")
+        if tail in _SUBST_CALLS:
+            out: frozenset[Origin] = frozenset()
+            for i in _SUBST_CALLS[tail]:
+                if i < len(call.args):
+                    out |= self._tag(self.origins(call.args[i]))
+            return out
+        if c in _WRAPPER_CALLS and call.args:
+            return self.origins(call.args[0])
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in _WRAPPER_METHODS:
+            return self.origins(call.func.value)
+        out = frozenset()
+        for arg in call.args:
+            out |= self.origins(arg)
+        for kw in call.keywords:
+            out |= self.origins(kw.value)
+        return out
+
+    @staticmethod
+    def _tag(origins: frozenset[Origin]) -> frozenset[Origin]:
+        return frozenset(dataclasses.replace(o, subst=True) for o in origins)

@@ -5,13 +5,19 @@ The engine is deliberately small and stdlib-only (``ast`` + ``re``):
 * :class:`SourceFile` — one parsed file: AST, per-line ``# sfcheck: noqa``
   suppressions, and path-segment helpers rules use to scope themselves.
 * :class:`Project`    — every file of one run plus the cross-module
-  indexes (class hierarchy) that the project-level rules (SF004/SF005)
-  need; constructible from in-memory sources so rule fixtures don't
-  touch the filesystem.
+  indexes: the class hierarchy and, since sfcheck v2, the whole-program
+  dataflow pass (:mod:`repro.analysis.dataflow` — call graph, per-
+  function summaries, called-under-jit / donation fixpoints) built once
+  and shared by every rule; constructible from in-memory sources so
+  rule fixtures don't touch the filesystem.
 * :func:`run_rules`   — per-file visitors + project passes, then the
   suppression filter.  A suppression without a justification comment is
   itself reported (SF000) — the tree must record *why* each invariant
   hold at each suppressed site, not merely that someone silenced it.
+* renderers           — ``human`` (the default ``path:line:col: CODE``
+  lines), ``github`` (workflow commands that surface as inline PR
+  annotations), and ``sarif`` (SARIF 2.1.0 JSON for code-scanning
+  upload / artifact archival).
 """
 from __future__ import annotations
 
@@ -19,12 +25,15 @@ import argparse
 import ast
 import dataclasses
 import io
+import json
 import re
 import sys
 import tokenize
 from pathlib import Path, PurePosixPath
-from typing import Iterable, Sequence
+from typing import TYPE_CHECKING, Iterable, Sequence
 
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from repro.analysis.dataflow import ProjectDataflow
 #: Engine-level code for malformed / unjustified suppression comments.
 SUPPRESSION_CODE = "SF000"
 #: Engine-level code for files that do not parse at all.
@@ -128,6 +137,7 @@ class Project:
     def __init__(self, files: Sequence[SourceFile]):
         self.files = list(files)
         self._class_index: dict[str, list[tuple[SourceFile, ast.ClassDef]]] | None = None
+        self._dataflow: "ProjectDataflow | None" = None
 
     @classmethod
     def from_sources(cls, sources: dict[str, str]) -> "Project":
@@ -136,6 +146,14 @@ class Project:
 
     def parsed(self) -> Iterable[SourceFile]:
         return (f for f in self.files if f.tree is not None)
+
+    def dataflow(self) -> "ProjectDataflow":
+        """The whole-program pass (call graph, summaries, fixpoints),
+        built on first use and shared by every rule of the run."""
+        if self._dataflow is None:
+            from repro.analysis.dataflow import ProjectDataflow
+            self._dataflow = ProjectDataflow(self)
+        return self._dataflow
 
     # -- class hierarchy (the lightweight cross-module pass) -------------------
 
@@ -224,6 +242,75 @@ def run_rules(project: Project, rules=None,
 
 
 # ---------------------------------------------------------------------------
+# output renderers
+# ---------------------------------------------------------------------------
+
+def _gh_escape(s: str) -> str:
+    """GitHub workflow-command escaping for message data."""
+    return s.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A")
+
+
+def render_github(diags: Sequence[Diagnostic]) -> list[str]:
+    """``::error`` workflow commands — GitHub renders them as inline PR
+    annotations when printed from a step."""
+    return [f"::error file={d.path},line={d.line},col={d.col},"
+            f"title=sfcheck {d.code}::{_gh_escape(d.message)}"
+            for d in diags]
+
+
+def _rule_catalogue(rules=None) -> list[tuple[str, str, str]]:
+    if rules is None:
+        from repro.analysis.rules import RULES
+        rules = RULES
+    cat = [(r.code, r.name, r.summary) for r in rules]
+    cat.append((SUPPRESSION_CODE, "suppression-hygiene",
+                "noqa comments must name known rules and carry a "
+                "justification"))
+    cat.append((PARSE_ERROR_CODE, "parse-error",
+                "file does not parse"))
+    return cat
+
+
+def sarif_report(diags: Sequence[Diagnostic], rules=None) -> dict:
+    """Minimal SARIF 2.1.0 log: one run, one result per diagnostic, the
+    full rule catalogue in tool.driver.rules (so code-scanning viewers
+    can show rule help even for clean runs)."""
+    return {
+        "$schema": ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                    "master/Schemata/sarif-schema-2.1.0.json"),
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "sfcheck",
+                "informationUri": "DESIGN.md",
+                "rules": [{"id": code,
+                           "name": name,
+                           "shortDescription": {"text": summary}}
+                          for code, name, summary in _rule_catalogue(rules)],
+            }},
+            "results": [{
+                "ruleId": d.code,
+                "level": "error",
+                "message": {"text": d.message},
+                "locations": [{"physicalLocation": {
+                    "artifactLocation": {"uri": d.path,
+                                         "uriBaseId": "%SRCROOT%"},
+                    "region": {"startLine": d.line, "startColumn": d.col},
+                }}],
+            } for d in diags],
+        }],
+    }
+
+
+def render(diags: Sequence[Diagnostic], fmt: str) -> str:
+    if fmt == "github":
+        return "\n".join(render_github(diags))
+    if fmt == "sarif":
+        return json.dumps(sarif_report(diags), indent=2, sort_keys=True)
+    return "\n".join(d.render() for d in diags)
+
+
+# ---------------------------------------------------------------------------
 # filesystem driver / CLI
 # ---------------------------------------------------------------------------
 
@@ -267,6 +354,12 @@ def main(argv: Sequence[str] | None = None) -> int:
                         help="files/directories to check (default: the tree)")
     parser.add_argument("--select", default="",
                         help="comma-separated rule codes to run (default all)")
+    parser.add_argument("--format", dest="fmt", default="human",
+                        choices=("human", "github", "sarif"),
+                        help="output format: human lines (default), GitHub "
+                             "::error annotations, or SARIF 2.1.0 JSON")
+    parser.add_argument("--output", default="",
+                        help="write the report to this file instead of stdout")
     parser.add_argument("--list-rules", action="store_true",
                         help="print the rule catalogue and exit")
     args = parser.parse_args(argv)
@@ -283,8 +376,11 @@ def main(argv: Sequence[str] | None = None) -> int:
     paths = [p for p in args.paths if Path(p).exists()]
     project = Project(discover(paths, Path.cwd()))
     diags = run_rules(project, select=select)
-    for d in diags:
-        print(d.render())
+    report = render(diags, args.fmt)
+    if args.output:
+        Path(args.output).write_text(report + "\n", encoding="utf-8")
+    elif report or args.fmt == "sarif":
+        print(report)
     if diags:
         print(f"\nsfcheck: {len(diags)} finding(s) in "
               f"{len(project.files)} file(s)", file=sys.stderr)

@@ -39,6 +39,10 @@ from repro.analysis.rules.sf003_iteration_order import IterationOrderRule  # noq
 from repro.analysis.rules.sf004_config_fields import ConfigFieldsRule      # noqa: E402
 from repro.analysis.rules.sf005_ledger import LedgerConservationRule       # noqa: E402
 from repro.analysis.rules.sf006_kernel_dispatch import KernelDispatchRule  # noqa: E402
+from repro.analysis.rules.sf007_retrace import RetraceHazardRule           # noqa: E402
+from repro.analysis.rules.sf008_donation import DonationSafetyRule         # noqa: E402
+from repro.analysis.rules.sf009_cache_keys import CacheKeyRule             # noqa: E402
+from repro.analysis.rules.sf010_epoch_flow import EpochFlowRule            # noqa: E402
 
 #: The registry, in code order.  ``run_rules`` iterates exactly this.
 RULES: list[Rule] = [
@@ -48,4 +52,8 @@ RULES: list[Rule] = [
     ConfigFieldsRule(),
     LedgerConservationRule(),
     KernelDispatchRule(),
+    RetraceHazardRule(),
+    DonationSafetyRule(),
+    CacheKeyRule(),
+    EpochFlowRule(),
 ]

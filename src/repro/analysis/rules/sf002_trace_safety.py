@@ -1,4 +1,4 @@
-"""SF002 — trace safety.
+"""SF002 — trace safety (interprocedural since sfcheck v2).
 
 A function handed to ``jax.jit`` runs its Python body *once per trace*,
 not once per step.  Host-state reads inside it are frozen into the
@@ -8,109 +8,68 @@ force a device→host sync that breaks async dispatch (``.item()``), or
 simply never fire again (``print``).  All of these look correct on the
 first step and silently diverge later.
 
-A function counts as *traced* when it (or any enclosing function) is
+A function counts as *traced* when it is in the whole-program
+**called-under-jit** set (:class:`repro.analysis.dataflow.ProjectDataflow`):
 
 * decorated with ``jax.jit`` / ``jax.pmap`` (bare, ``@jax.jit(...)`` or
   via ``functools.partial(jax.jit, ...)``), or
-* passed by name as the first argument to a ``jax.jit(...)`` /
-  ``jax.pmap(...)`` call anywhere in the same file.
+* passed by name to a ``jax.jit(...)`` / ``jax.pmap(...)`` call anywhere
+  in the project, or
+* reachable from either through the project call graph — helper modules
+  included, which is how PR 4's backend sniffing actually hid: the
+  global read sat in ``ops.py``, the jit decorator in ``subcge.py``.
 
 Inside traced bodies (nested defs and lambdas included) the rule flags
 ``time.*`` clock calls, ``print(...)``, ``.item()``, ``global`` /
 ``nonlocal`` mutation, and reads of module-level *rebound* globals —
 a global assigned more than once, or assigned under a ``global``
 declaration, is mutable state whose value the trace captures silently.
+Rebound-global reads are judged against the *defining file's* globals,
+so a cross-module helper is checked in its own module's terms.
 """
 from __future__ import annotations
 
 import ast
 
 from repro.analysis.rules import Rule
-from repro.analysis.rules.common import (call_canonical, dotted, import_map,
-                                         parent_map)
+from repro.analysis.rules.common import call_canonical
 
-_TRACERS = {"jax.jit", "jax.pmap"}
 _CLOCKS = {"time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
            "time.perf_counter", "time.perf_counter_ns"}
-_PARTIAL = {"functools.partial", "partial"}
-
-
-def _decorator_traces(dec: ast.AST, imports) -> bool:
-    """True when a decorator expression makes the function traced."""
-    if dotted(dec) is not None:
-        c = dotted(dec)
-        head, _, rest = c.partition(".")
-        c = f"{imports.get(head, head)}.{rest}" if rest else imports.get(head, head)
-        return c in _TRACERS or c == "jit"
-    if isinstance(dec, ast.Call):
-        c = call_canonical(dec, imports)
-        if c in _TRACERS:                         # @jax.jit(static_argnums=..)
-            return True
-        if c in _PARTIAL and dec.args:            # @partial(jax.jit, ...)
-            return _decorator_traces(dec.args[0], imports)
-    return False
-
-
-def _jitted_names(tree: ast.Module, imports) -> set[str]:
-    """Function names passed as the first argument of a jit/pmap call
-    somewhere in this file (``jitted = jax.jit(fn, ...)``)."""
-    out: set[str] = set()
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Call) and call_canonical(node, imports) in _TRACERS:
-            if node.args and isinstance(node.args[0], ast.Name):
-                out.add(node.args[0].id)
-    return out
-
-
-def _rebound_globals(tree: ast.Module) -> set[str]:
-    """Module-level names that are *mutable state*: assigned more than
-    once at module scope, or assigned anywhere under a ``global``
-    declaration.  Single-assignment module constants don't count."""
-    counts: dict[str, int] = {}
-    for stmt in tree.body:
-        targets = []
-        if isinstance(stmt, ast.Assign):
-            targets = [t for t in stmt.targets if isinstance(t, ast.Name)]
-        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)) \
-                and isinstance(stmt.target, ast.Name):
-            targets = [stmt.target]
-        for t in targets:
-            counts[t.id] = counts.get(t.id, 0) + 1
-    rebound = {n for n, c in counts.items() if c > 1}
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Global):
-            rebound.update(n for n in node.names if n in counts)
-    return rebound
 
 
 class TraceSafetyRule(Rule):
     code = "SF002"
     name = "trace-safety"
     summary = ("no wall-clock, print, .item() host syncs, or mutable-"
-               "global capture inside jit/pmap-traced functions")
+               "global capture inside (transitively) jit-traced functions")
 
-    def check_file(self, file, project):
-        imports = import_map(file.tree)
-        jitted = _jitted_names(file.tree, imports)
-        rebound = _rebound_globals(file.tree)
-        parents = parent_map(file.tree)
-
-        traced_roots = []
-        for node in ast.walk(file.tree):
-            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                if (node.name in jitted
-                        or any(_decorator_traces(d, imports)
-                               for d in node.decorator_list)):
-                    traced_roots.append(node)
-
-        seen: set[ast.AST] = set()
-        for root in traced_roots:
-            for node in ast.walk(root):
-                if node in seen:
+    def check_project(self, project):
+        df = project.dataflow()
+        seen: dict[str, set[int]] = {}
+        for fi in df.functions():
+            if not df.is_traced(fi):
+                continue
+            # nested defs of a traced function are walked with their root;
+            # skip them so each node is checked (and reported) once
+            anc = fi.parent
+            ancestor_traced = False
+            while anc is not None:
+                if df.is_traced(anc):
+                    ancestor_traced = True
+                    break
+                anc = anc.parent
+            if ancestor_traced:
+                continue
+            fsum = fi.fsum
+            marks = seen.setdefault(fsum.file.rel, set())
+            for node in ast.walk(fi.node):
+                if id(node) in marks:
                     continue
-                seen.add(node)
-                yield from self._check_node(file, node, root, imports,
-                                            rebound, parents)
+                marks.add(id(node))
+                yield from self._check_node(
+                    fsum.file, node, fi.node, fsum.imports,
+                    fsum.rebound_globals, fsum.parents)
 
     def _check_node(self, file, node, root, imports, rebound, parents):
         if isinstance(node, ast.Call):

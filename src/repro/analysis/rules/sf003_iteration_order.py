@@ -26,7 +26,7 @@ from __future__ import annotations
 import ast
 
 from repro.analysis.rules import Rule
-from repro.analysis.rules.common import call_canonical, import_map
+from repro.analysis.rules.common import call_canonical
 
 _SET_METHODS = {"union", "intersection", "difference",
                 "symmetric_difference", "copy"}
@@ -55,7 +55,7 @@ class IterationOrderRule(Rule):
                "order-sensitive work — wrap in sorted()")
 
     def check_file(self, file, project):
-        imports = import_map(file.tree)
+        imports = project.dataflow().summary(file).imports
         # module scope first: its set-origin names seed every function
         # scope (a function iterating a module-level set is the same bug)
         module_sets = yield from self._check_scope(file, file.tree, True,

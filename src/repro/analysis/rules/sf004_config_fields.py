@@ -52,24 +52,18 @@ class ConfigFieldsRule(Rule):
         if not fields:
             return
 
-        # consumption scan: every attribute LOAD and every string constant
-        # in src/.  Attribute stores/keywords are writes, not reads.
+        # consumption scan over the cached per-file summaries: attribute
+        # LOADs (stores/keywords are writes, not reads) and exact-identifier
+        # string constants ("momentum" in the rejection table counts, prose
+        # mentions in docstrings don't — they are never a single identifier).
+        df = project.dataflow()
         attr_reads: set[str] = set()
         str_consts: set[str] = set()
-        for f in project.parsed():
-            if f.top != "src":
+        for fsum in df.file_summaries():
+            if fsum.file.top != "src":
                 continue
-            for node in ast.walk(f.tree):
-                if isinstance(node, ast.Attribute) \
-                        and isinstance(node.ctx, ast.Load):
-                    attr_reads.add(node.attr)
-                elif isinstance(node, ast.Constant) \
-                        and isinstance(node.value, str) \
-                        and node.value.isidentifier():
-                    # exact-identifier strings only: "momentum" in the
-                    # rejection table counts, prose mentions in docstrings
-                    # don't (they are never a single identifier)
-                    str_consts.add(node.value)
+            attr_reads |= fsum.attr_loads
+            str_consts |= fsum.str_consts
 
         for cls_name, name, f, stmt in fields:
             if name in attr_reads or name in str_consts:

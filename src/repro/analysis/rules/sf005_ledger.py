@@ -25,7 +25,7 @@ from __future__ import annotations
 import ast
 
 from repro.analysis.rules import Rule
-from repro.analysis.rules.common import call_canonical, import_map, parent_map
+from repro.analysis.rules.common import call_canonical
 
 #: Method names that enqueue onto (or drain from) a network substrate.
 #: ``round`` is deliberately absent: ``ndarray.round()`` would swamp the
@@ -59,11 +59,13 @@ class LedgerConservationRule(Rule):
 
     def check_project(self, project):
         transports = project.subclasses_of(TRANSPORT_BASE)
+        df = project.dataflow()
         for f in project.parsed():
             if not self._in_scope(f):
                 continue
-            imports = import_map(f.tree)
-            parents = parent_map(f.tree)
+            fsum = df.summary(f)
+            imports = fsum.imports
+            parents = fsum.parents
             for node in ast.walk(f.tree):
                 if not isinstance(node, ast.Call):
                     continue

@@ -22,7 +22,7 @@ from __future__ import annotations
 import ast
 
 from repro.analysis.rules import Rule
-from repro.analysis.rules.common import canonical, import_map
+from repro.analysis.rules.common import canonical
 
 KERNELS_PKG = "repro.kernels"
 ALLOWED_SUBMODULE = "ops"
@@ -37,7 +37,7 @@ class KernelDispatchRule(Rule):
     def check_file(self, file, project):
         if file.in_dir("kernels"):
             return
-        imports = import_map(file.tree)
+        imports = project.dataflow().summary(file).imports
         seen_attr: set[tuple[int, int]] = set()
         for node in ast.walk(file.tree):
             if isinstance(node, ast.Call):

@@ -1,0 +1,211 @@
+"""SF007 — retrace hazards.
+
+``jax.jit`` caches the compiled program on the *callable object*.  Build
+the callable fresh and the cache is gone: PR 9's serve loop constructed
+``jax.jit(decode_fn)`` per decode step, recompiling a full forward pass
+per token — hundreds of times slower, no error anywhere.  This rule
+makes that bug class (and its cousins) a lint error:
+
+* **jit inside a loop** — a ``jax.jit(...)`` call lexically under a
+  ``for``/``while``.  Exempt when the construction genuinely depends on
+  the iteration: the jitted program is stored into a subscript cache
+  (``fns[key] = jax.jit(f)``), the wrapped callable is itself (re)bound
+  inside the loop body, or a loop variable appears in the jit call's
+  arguments (per-``K`` programs in a benchmark sweep are per-``K`` on
+  purpose).
+* **jit per call** — immediately-invoked ``jax.jit(f)(x)``: the program
+  is compiled, used once, and dropped.
+* **factory called in a loop** — a function that constructs jitted
+  callables without caching them (a scope-local ``jax.jit`` call or a
+  jit-decorated nested def), invoked under a loop.  The construction
+  site looks innocent; the call site is where the recompile storm
+  happens — this is the interprocedural face of the PR 9 bug.
+* **closure over a rebindable global** — ``jax.jit`` applied to a
+  lambda whose body reads a module global that is rebound elsewhere
+  (the PR 4 backend-sniffing shape): the trace captures one value and
+  later rebinds are silently ignored.  Named functions with the same
+  problem are SF002's job; the lambda has no body for SF002 to attribute.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+from repro.analysis.rules.common import walk_scope
+
+
+def _loop_ancestry(node, fsum):
+    """Loops lexically enclosing ``node`` up to its defining function."""
+    out = []
+    cur = fsum.parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            break
+        if isinstance(cur, (ast.For, ast.AsyncFor, ast.While)):
+            out.append(cur)
+        cur = fsum.parents.get(cur)
+    return out
+
+
+def _loop_target_names(loops) -> set[str]:
+    names: set[str] = set()
+    for loop in loops:
+        if isinstance(loop, (ast.For, ast.AsyncFor)):
+            for sub in ast.walk(loop.target):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+    return names
+
+
+def _names_in(node) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _bound_in_loops(name: str, loops) -> bool:
+    """Is ``name`` (re)bound inside any of the enclosing loop bodies?
+    A callable rebuilt per iteration legitimately gets a fresh jit."""
+    for loop in loops:
+        for sub in ast.walk(loop):
+            if isinstance(sub, ast.Assign):
+                for t in sub.targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name) and leaf.id == name:
+                            return True
+            elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and sub.name == name:
+                return True
+    return False
+
+
+def _stored_in_subscript(call, fsum) -> bool:
+    """``fns[key] = jax.jit(f)`` — or assigned to a name that is stored
+    into a subscript in the same scope — is the cache idiom, not a leak."""
+    parent = fsum.parents.get(call)
+    if not isinstance(parent, ast.Assign):
+        return isinstance(parent, ast.Subscript)
+    for t in parent.targets:
+        if isinstance(t, ast.Subscript):
+            return True
+    names = [t.id for t in parent.targets if isinstance(t, ast.Name)]
+    if not names:
+        return False
+    scope = fsum.enclosing_function(call) or fsum.file.tree
+    for sub in walk_scope(scope):
+        if isinstance(sub, ast.Assign):
+            for t in sub.targets:
+                if isinstance(t, ast.Subscript) \
+                        and isinstance(sub.value, ast.Name) \
+                        and sub.value.id in names:
+                    return True
+    return False
+
+
+class RetraceHazardRule(Rule):
+    code = "SF007"
+    name = "retrace-hazard"
+    summary = ("no jit construction inside loops or per call, no "
+               "uncached jit factories invoked under a loop, no jit "
+               "lambdas over rebindable globals")
+
+    def check_project(self, project):
+        df = project.dataflow()
+        factories = self._factories(df)
+        for fsum in df.file_summaries():
+            yield from self._check_jit_sites(df, fsum)
+            yield from self._check_factory_calls(df, fsum, factories)
+
+    # -- direct jit construction sites ----------------------------------------
+
+    def _check_jit_sites(self, df, fsum):
+        file = fsum.file
+        for fi, call in fsum.jit_wraps:
+            # immediately-invoked: jax.jit(f)(x)
+            parent = fsum.parents.get(call)
+            if isinstance(parent, ast.Call) and parent.func is call:
+                yield self.diag(
+                    file, call,
+                    "jit program compiled and invoked in one expression — "
+                    "the compiled program is dropped after this call and "
+                    "every execution retraces; bind the jitted callable "
+                    "once and reuse it")
+                continue
+            loops = _loop_ancestry(call, fsum)
+            if not loops:
+                continue
+            if _stored_in_subscript(call, fsum):
+                continue
+            loop_names = _loop_target_names(loops)
+            if loop_names & _names_in(call):
+                continue            # per-iteration program on purpose
+            if call.args and isinstance(call.args[0], ast.Name) \
+                    and _bound_in_loops(call.args[0].id, loops):
+                continue            # wrapped callable is fresh per iteration
+            yield self.diag(
+                file, call,
+                "jax.jit(...) inside a loop: jit caches compiled programs "
+                "on the callable object, so a fresh wrapper per iteration "
+                "recompiles every time (the PR 9 per-token decode bug) — "
+                "hoist the jit out of the loop or store it in a keyed cache")
+            # a lambda closing over a rebindable global is wrong even
+            # outside a loop; check all wrap sites below
+        for fi, call in fsum.jit_wraps:
+            if call.args and isinstance(call.args[0], ast.Lambda):
+                lam = call.args[0]
+                lam_params = {a.arg for a in (lam.args.posonlyargs
+                                              + lam.args.args
+                                              + lam.args.kwonlyargs)}
+                for sub in ast.walk(lam.body):
+                    if isinstance(sub, ast.Name) \
+                            and isinstance(sub.ctx, ast.Load) \
+                            and sub.id in fsum.rebound_globals \
+                            and sub.id not in lam_params:
+                        yield self.diag(
+                            file, sub,
+                            f"jit-wrapped lambda reads mutable module "
+                            f"global '{sub.id}' — the trace captures one "
+                            "value and later rebinds are silently ignored "
+                            "(the PR 4 backend-sniffing shape); resolve it "
+                            "before wrapping")
+
+    # -- factories: functions that build uncached jitted callables -------------
+
+    def _factories(self, df) -> dict[str, str]:
+        """qname -> why, for functions that construct jitted callables
+        per invocation (uncached scope jit call or jit-decorated nested
+        def).  Calling one of these in a loop retraces per iteration."""
+        out: dict[str, str] = {}
+        for fsum in df.file_summaries():
+            for fi, call in fsum.jit_wraps:
+                if fi is None:
+                    continue        # module scope: runs once at import
+                if _stored_in_subscript(call, fsum):
+                    continue        # keyed cache — the sanctioned idiom
+                out.setdefault(
+                    fi.qname,
+                    f"builds a jitted callable at line {call.lineno}")
+        for fi2 in df.functions():
+            if fi2.jit_decorated and fi2.parent is not None:
+                out.setdefault(
+                    fi2.parent.qname,
+                    f"defines jit-decorated '{fi2.name}' per call")
+        return out
+
+    def _check_factory_calls(self, df, fsum, factories):
+        file = fsum.file
+        for fi in fsum.functions:
+            for call, callee in fi.edges:
+                why = factories.get(callee.qname)
+                if why is None:
+                    continue
+                loops = _loop_ancestry(call, fsum)
+                if not loops:
+                    continue
+                loop_names = _loop_target_names(loops)
+                if loop_names & _names_in(call):
+                    continue        # per-iteration programs on purpose
+                yield self.diag(
+                    file, call,
+                    f"'{callee.name}' {why} and is invoked inside a loop "
+                    "— every iteration recompiles (the interprocedural "
+                    "PR 9 bug); hoist the call or cache the program by key")

@@ -1,0 +1,188 @@
+"""SF008 — donation safety.
+
+The stacked client-parameter buffers are donated into the jit dispatches
+(``donate_argnums=(0,)`` on ``estimate_and_update`` / ``replay_batched``)
+so XLA can update the multi-hundred-MB arrays in place.  Donation
+*invalidates* the argument: after the call, the old buffer is dead and
+reading it returns garbage (or raises, backend-depending).  The safe
+idiom is an immediate rebind — ``stacked, ... = f(stacked, ...)`` — and
+everything else is a latent use-after-free that only bites on backends
+that actually reuse the buffer.
+
+Interprocedural: the dataflow pass knows each function's donated
+positions from its ``@functools.partial(jax.jit, donate_argnums=...)``
+decorator, from ``jax.jit(f, donate_argnums=...)`` wrap sites (including
+``self._f = jax.jit(f, ...)`` aliases), and from the *donates-through*
+fixpoint — a function that forwards its own parameter into a donated
+position donates that parameter for its callers too, so the hazard is
+visible at every level of the call stack.
+
+Flagged: any ``Name`` load of a donated variable on a statement after
+the donating call, along any live straight-line path in the same scope.
+Branch bodies are scanned with path-local environments; loop bodies are
+scanned twice, so a donation in iteration *i* flags a read in iteration
+*i+1* — which is exactly why the rebind idiom is clean: the rebind
+clears the hazard before the next pass.  A path that *terminates*
+(``return``/``raise``/``break``/``continue``) carries its donations out
+of the scope, not into the next statement — ``if fused: return f(x)``
+followed by an ``else``-path read of ``x`` is fine.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+
+
+def _names_loaded(node) -> list[ast.Name]:
+    """Name loads under ``node``, skipping nested def bodies (they run
+    later, against whatever the name is bound to then); lambdas and
+    comprehensions execute in place and are included."""
+    out = []
+    stack = [node]
+    while stack:
+        cur = stack.pop()
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(cur, ast.Name) and isinstance(cur.ctx, ast.Load):
+            out.append(cur)
+        stack.extend(ast.iter_child_nodes(cur))
+    return out
+
+
+def _names_bound(stmt) -> set[str]:
+    out: set[str] = set()
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            for leaf in ast.walk(t):
+                if isinstance(leaf, ast.Name) and isinstance(leaf.ctx,
+                                                             ast.Store):
+                    out.add(leaf.id)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)) \
+            and isinstance(stmt.target, ast.Name):
+        out.add(stmt.target.id)
+    return out
+
+
+class DonationSafetyRule(Rule):
+    code = "SF008"
+    name = "donation-safety"
+    summary = ("no reads of a buffer after it was passed at a donated "
+               "position (donate_argnums), across function boundaries")
+
+    def check_project(self, project):
+        df = project.dataflow()
+        for fi in df.functions():
+            seen: set[tuple[int, int]] = set()
+            yield from self._scan_block(df, fi, fi.node.body, {}, seen)
+
+    # -- path-local statement scan --------------------------------------------
+
+    def _scan_block(self, df, fi, body, donated: dict[str, tuple[str, int]],
+                    seen):
+        """Walk one statement list.  ``donated`` maps name -> (callee
+        label, donation line); mutated as donations/rebinds occur so the
+        hazard state falls through to the caller's next statement.
+        Returns True when the block definitely terminates (return/raise/
+        break/continue) — the caller must then discard its environment
+        instead of merging it into the fall-through path."""
+        for stmt in body:
+            for expr in self._headers(stmt):
+                # reads of an already-dead buffer (donations from *previous*
+                # statements only — the donating call's own argument read is
+                # the donation itself, not a use-after)
+                for name in _names_loaded(expr):
+                    key = (name.lineno, name.col_offset)
+                    if name.id in donated and key not in seen:
+                        seen.add(key)
+                        label, line = donated[name.id]
+                        yield self.diag(
+                            fi.fsum.file, name,
+                            f"'{name.id}' was donated to {label} (line "
+                            f"{line}) and read afterwards — donated "
+                            "buffers are invalidated by XLA; rebind the "
+                            "result (x, ... = f(x, ...)) or pass a copy")
+                for call in ast.walk(expr):
+                    if isinstance(call, ast.Call):
+                        for arg, label in self._donated_args(df, fi, call):
+                            if isinstance(arg, ast.Name):
+                                donated[arg.id] = (label, call.lineno)
+            for name in _names_bound(stmt):
+                donated.pop(name, None)
+            if isinstance(stmt, (ast.Return, ast.Raise, ast.Break,
+                                 ast.Continue)):
+                return True
+            term = yield from self._scan_bodies(df, fi, stmt, donated, seen)
+            if term:
+                return True
+        return False
+
+    def _headers(self, stmt) -> list[ast.AST]:
+        """Expressions evaluated *at* this statement (compound statements'
+        bodies are scanned separately with path-local environments)."""
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            return [stmt.iter]
+        if isinstance(stmt, (ast.While, ast.If)):
+            return [stmt.test]
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            return [item.context_expr for item in stmt.items]
+        if isinstance(stmt, ast.Try):
+            return []
+        return [stmt]
+
+    def _scan_bodies(self, df, fi, stmt, donated, seen):
+        """Scan a compound statement's bodies; returns True when every
+        live path through it terminates the enclosing block."""
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            env = dict(donated)
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                for leaf in ast.walk(stmt.target):
+                    if isinstance(leaf, ast.Name):
+                        env.pop(leaf.id, None)
+            term = yield from self._scan_block(df, fi, stmt.body, env, seen)
+            if not term:            # donation in iter i, read in iter i+1
+                term = yield from self._scan_block(df, fi, stmt.body, env,
+                                                   seen)
+            yield from self._scan_block(df, fi, stmt.orelse, dict(env), seen)
+            if not term:            # zero-iteration path keeps `donated` too
+                donated.update(env)
+            return False            # the loop as a whole falls through
+        if isinstance(stmt, ast.If):
+            terms = []
+            for branch in (stmt.body, stmt.orelse):
+                env = dict(donated)
+                term = yield from self._scan_block(df, fi, branch, env, seen)
+                terms.append(term)
+                if not term:
+                    donated.update(env)
+            return bool(stmt.orelse) and all(terms)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            term = yield from self._scan_block(df, fi, stmt.body, donated,
+                                               seen)
+            return term
+        if isinstance(stmt, ast.Try):
+            for branch in ([stmt.body, stmt.orelse, stmt.finalbody]
+                           + [h.body for h in stmt.handlers]):
+                env = dict(donated)
+                term = yield from self._scan_block(df, fi, branch, env, seen)
+                if not term:
+                    donated.update(env)
+        return False
+
+    # -- donation sites --------------------------------------------------------
+
+    def _donated_args(self, df, fi, call):
+        """(arg expression, callee label) pairs donated by this call."""
+        out = []
+        for arg in df.call_donations(call, fi, fi.fsum):
+            label = f"'{ast.unparse(call.func)}'"
+            out.append((arg, label))
+        # immediately-invoked jit with donate: jax.jit(f, donate_...)(x)
+        if isinstance(call.func, ast.Call):
+            from repro.analysis.dataflow import donate_positions, is_jit_call
+            inner = call.func
+            if is_jit_call(inner, fi.fsum.imports):
+                for pos in donate_positions(inner.keywords, []):
+                    if pos < len(call.args):
+                        out.append((call.args[pos], "an inline jit"))
+        return out

@@ -1,0 +1,165 @@
+"""SF009 — jit-cache-key completeness.
+
+The serving and simulation layers keep *dict-keyed jit caches*: one
+compiled program per padded shape — ``self._prefill_fns[(Bg, T)]``,
+``self._decode_fns[bucket]``, the bridge's ``self._fold_fns[(K, E)]``.
+The contract is that the key captures **everything trace-affecting**
+that varies between cache entries.  Two ways to get this wrong:
+
+* a factory parameter that shapes the traced program is left out of the
+  key — two different shapes collide on one entry and the second caller
+  silently runs the first caller's program (wrong padding, wrong
+  output);
+* the traced closure reads ``self.<attr>`` where ``<attr>`` is
+  *reassigned outside __init__* — a cache hit replays a program
+  compiled against a stale value of that attribute (the cache-shaped
+  cousin of PR 4's trace-time backend capture).
+
+The rule recognizes the cache idiom inside ``src/repro/dtrain``,
+``src/repro/sim`` and ``src/repro/serve``: a scope where a ``jax.jit``
+product is stored into a subscript (directly or via a local name).  For
+each such cache it checks (a) every factory parameter is part of the
+key expression, and (b) every ``self.<attr>`` the jitted closure reads
+is init-constant (assigned only in ``__init__``), part of the key, or a
+call-time argument.  Parameters/attrs whose terminal name marks them as
+the cache dict itself (the subscript base) are exempt.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+from repro.analysis.rules.common import walk_scope
+
+_INIT_METHODS = {"__init__", "__post_init__"}
+
+
+def _key_names(key_expr) -> set[str]:
+    return {n.id for n in ast.walk(key_expr) if isinstance(n, ast.Name)}
+
+
+class CacheKeyRule(Rule):
+    code = "SF009"
+    name = "jit-cache-key"
+    summary = ("dict-keyed jit caches in dtrain/, sim/ and serve/ must key "
+               "on every trace-affecting factory param and mutable attr")
+
+    def _in_scope(self, file) -> bool:
+        return file.top == "src" and (file.in_dir("dtrain")
+                                      or file.in_dir("sim")
+                                      or file.in_dir("serve"))
+
+    def check_project(self, project):
+        df = project.dataflow()
+        for fsum in df.file_summaries():
+            if not self._in_scope(fsum.file):
+                continue
+            for fi in fsum.functions:
+                yield from self._check_function(df, fsum, fi)
+
+    def _check_function(self, df, fsum, fi):
+        caches = self._caches(fsum, fi)
+        if not caches:
+            return
+        attr_writers = None
+        for jit_call, store in caches:
+            key_names = _key_names(store.slice)
+            # (a) factory params must all reach the key
+            for p in fi.params:
+                if p == "self" or p.startswith("_"):
+                    continue
+                if p not in key_names:
+                    yield self.diag(
+                        fsum.file, store,
+                        f"jit cache key {ast.unparse(store.slice)!r} omits "
+                        f"factory parameter '{p}' — two calls differing "
+                        "only in it collide on one compiled program "
+                        "(stale shape/config); add it to the key")
+            # (b) mutable self-attrs read by the traced closure
+            if fi.cls is None:
+                continue
+            if attr_writers is None:
+                attr_writers = self._attr_writers(fsum, fi.cls)
+            cache_base = (store.value.attr
+                          if isinstance(store.value, ast.Attribute)
+                          else None)
+            for attr, site in self._closure_attr_reads(fi):
+                writers = attr_writers.get(attr, [])
+                mutators = [m for m in writers if m not in _INIT_METHODS]
+                if not mutators or attr == cache_base:
+                    continue
+                if attr in key_names:
+                    continue
+                yield self.diag(
+                    fsum.file, site,
+                    f"jit cache factory reads self.{attr}, which "
+                    f"{'/'.join(sorted(set(mutators)))} reassigns — a "
+                    "cache hit replays a program compiled against a stale "
+                    "value; include it in the key or pass it as a traced "
+                    "argument")
+
+    # -- cache recognition -----------------------------------------------------
+
+    def _caches(self, fsum, fi):
+        """(jit call, subscript-store Assign target) pairs: jit products
+        stored into a dict, directly or via a local name."""
+        jit_assigns: dict[str, ast.Call] = {}
+        direct: list[tuple[ast.Call, ast.Subscript]] = []
+        stores: list[tuple[ast.Subscript, str]] = []
+        for node in walk_scope(fi.node):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt, val = node.targets[0], node.value
+            is_jit = isinstance(val, ast.Call) and self._is_jit(val, fsum)
+            if isinstance(tgt, ast.Subscript):
+                if is_jit:
+                    direct.append((val, tgt))
+                elif isinstance(val, ast.Name):
+                    stores.append((tgt, val.id))
+            elif isinstance(tgt, ast.Name) and is_jit:
+                jit_assigns[tgt.id] = val
+        out = list(direct)
+        for tgt, name in stores:
+            if name in jit_assigns:
+                out.append((jit_assigns[name], tgt))
+        return out
+
+    @staticmethod
+    def _is_jit(call, fsum) -> bool:
+        from repro.analysis.dataflow import is_jit_call
+        return is_jit_call(call, fsum.imports)
+
+    # -- closure attr reads / class attr writes --------------------------------
+
+    def _closure_attr_reads(self, fi):
+        """``self.<attr>`` loads anywhere in the factory — in its own
+        scope (captured by the closure at build time) or inside nested
+        defs/lambdas (read at trace time) — both frozen into the cached
+        program."""
+        out = []
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.ctx, ast.Load) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "self":
+                out.append((node.attr, node))
+        return out
+
+    def _attr_writers(self, fsum, cls) -> dict[str, list[str]]:
+        """attr -> method names that assign ``self.<attr>`` in this class."""
+        out: dict[str, list[str]] = {}
+        for stmt in cls.body:
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for node in ast.walk(stmt):
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets = node.targets
+                elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                    targets = [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id == "self":
+                        out.setdefault(t.attr, []).append(stmt.name)
+        return out

@@ -1,0 +1,175 @@
+"""SF010 — sender-step epoch flow.
+
+PR 2's bug, promoted to a lint error.  A flooded SeedFlood message
+regenerates on the receiver from ``(seed, coef, sender_step)``: the
+sender's step selects the τ-epoch, and the τ-epoch selects the subspace
+the update lives in.  The original replay path substituted the
+*receiver's* step for the sender's (``np.where(cfs != 0, t, PAD)``) —
+bitwise correct while both sat in the same epoch, silently wrong the
+moment a replay crossed a subspace-refresh boundary under delayed
+flooding or churn catch-up.  No error is ever raised; consensus just
+drifts.
+
+In ``src/repro/dtrain``, ``src/repro/sim`` and ``src/repro/serve`` the
+rule checks every epoch-aware reconstruction call
+(``epoch_slots(steps, ...)`` / ``apply_messages_epoch(..., steps, ...)``)
+with the local value-flow engine (:class:`repro.analysis.dataflow
+.LocalFlows`):
+
+* **receiver-step substitution** — the ``steps`` argument has an origin
+  that reaches the call through a scalar-substitution constructor
+  (``np.where`` branch, ``np.full`` fill, ternary) and is not itself
+  step-data (a ``*step*``-named parameter/attribute, or an ALL_CAPS
+  padding constant).  That is the PR 2 shape: payload slots overwritten
+  with a receiver-local scalar.
+* **no sender steps at all** — the ``steps`` argument has no step-named
+  origin anywhere: whatever is flowing in, it is not the payload's
+  ``steps`` vector.
+* **dropped payload steps** — a function reads a flood payload's
+  ``.seeds`` *and* ``.coefs`` but never touches its ``.steps``: the
+  reconstruction it feeds cannot be epoch-correct, whichever call it
+  ends at.
+* **epoch-less replay in a step-aware context** — a call to the
+  epoch-less ``apply_messages(...)`` from a function that has sender
+  steps in hand (reads a ``.steps`` attribute): the epoch-aware variant
+  exists precisely so those steps are not dropped on the floor.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Rule
+from repro.analysis.rules.common import call_canonical, dotted
+
+#: canonical name -> index of the sender-steps positional argument.
+EPOCH_CALLS = {
+    "repro.core.subcge.epoch_slots": 0,
+    "repro.core.subcge.apply_messages_epoch": 6,
+}
+#: The epoch-less reconstruction (correct only in step-free contexts).
+FLAT_CALLS = {"repro.core.subcge.apply_messages"}
+
+_STEP_NAMES = {"st", "sts", "stp", "ts"}
+
+
+def _steplike(label: str) -> bool:
+    return "step" in label.lower() or label.lower() in _STEP_NAMES
+
+
+def _is_pad_const(label: str) -> bool:
+    stripped = label.lstrip("_")
+    return bool(stripped) and stripped == stripped.upper()
+
+
+class EpochFlowRule(Rule):
+    code = "SF010"
+    name = "epoch-flow"
+    summary = ("flood payload sender steps must reach epoch_slots/"
+               "apply_messages_epoch unsubstituted on every replay path")
+
+    def _in_scope(self, file) -> bool:
+        return file.top == "src" and (file.in_dir("dtrain")
+                                      or file.in_dir("sim")
+                                      or file.in_dir("serve"))
+
+    def check_project(self, project):
+        df = project.dataflow()
+        for fsum in df.file_summaries():
+            if not self._in_scope(fsum.file):
+                continue
+            for fi in fsum.functions:
+                yield from self._check_epoch_args(df, fsum, fi)
+                yield from self._check_dropped_steps(fsum, fi)
+                yield from self._check_flat_replay(fsum, fi)
+
+    # -- the steps argument of epoch-aware calls -------------------------------
+
+    def _check_epoch_args(self, df, fsum, fi):
+        for call in fi.calls:
+            c = call_canonical(call, fsum.imports)
+            tail = c.rsplit(".", 1)[-1] if c else None
+            pos = None
+            for canon, p in EPOCH_CALLS.items():
+                if c == canon or tail == canon.rsplit(".", 1)[-1]:
+                    pos = p
+                    break
+            if pos is None:
+                continue
+            steps_arg = None
+            if pos < len(call.args):
+                steps_arg = call.args[pos]
+            for kw in call.keywords:
+                if kw.arg == "steps":
+                    steps_arg = kw.value
+            if steps_arg is None:
+                continue
+            flows = df.flows(fi)
+            origins = flows.origins(steps_arg)
+            named = [o for o in origins if o.kind in ("param", "attr",
+                                                      "global")]
+            substituted = [
+                o for o in named
+                if o.subst and not _steplike(o.label)
+                and not _is_pad_const(o.label)]
+            for o in substituted:
+                yield self.diag(
+                    fsum.file, steps_arg,
+                    f"sender-steps argument of {tail}() carries "
+                    f"'{o.label}' through a scalar-substitution "
+                    "(np.where/np.full/ternary) — substituting a "
+                    "receiver-local value for the payload's sender steps "
+                    "replays across a τ boundary in the wrong subspace "
+                    "(the PR 2 bug); thread the payload's steps through "
+                    "unmodified")
+            if named and not any(_steplike(o.label) for o in named):
+                labels = sorted({o.label for o in named})
+                yield self.diag(
+                    fsum.file, steps_arg,
+                    f"sender-steps argument of {tail}() has no step-data "
+                    f"origin (flows from {', '.join(labels)}) — the "
+                    "payload's steps vector never reaches the epoch "
+                    "computation on this path")
+
+    # -- payloads consumed without their steps ---------------------------------
+
+    def _check_dropped_steps(self, fsum, fi):
+        bases: dict[str, set[str]] = {}
+        sites: dict[str, ast.AST] = {}
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.ctx, ast.Load) \
+                    and node.attr in ("seeds", "coefs", "steps"):
+                base = dotted(node.value)
+                if base is None:
+                    continue
+                bases.setdefault(base, set()).add(node.attr)
+                sites.setdefault(base, node)
+        for base in sorted(bases):
+            got = bases[base]
+            if {"seeds", "coefs"} <= got and "steps" not in got:
+                yield self.diag(
+                    fsum.file, sites[base],
+                    f"'{base}' has its .seeds and .coefs consumed but "
+                    ".steps is never read — an epoch-correct replay needs "
+                    "the sender steps; without them the reconstruction "
+                    "regenerates the receiver's subspace, not the "
+                    "sender's")
+
+    # -- epoch-less replay where sender steps are in hand ----------------------
+
+    def _check_flat_replay(self, fsum, fi):
+        has_steps = any(
+            isinstance(node, ast.Attribute) and node.attr == "steps"
+            and isinstance(node.ctx, ast.Load)
+            for node in ast.walk(fi.node))
+        if not has_steps:
+            return
+        for call in fi.calls:
+            c = call_canonical(call, fsum.imports)
+            if c in FLAT_CALLS:
+                yield self.diag(
+                    fsum.file, call,
+                    "epoch-less apply_messages() in a function that holds "
+                    "sender steps — use apply_messages_epoch/epoch_slots "
+                    "so the steps select each message's τ-epoch subspace "
+                    "instead of being dropped")

@@ -153,7 +153,7 @@ class SeedFloodMethod(MethodBase):
             # legacy receiver-step replay (regression demonstration only):
             # pin every live message to the receiver's current epoch
             stp = np.where(cfs != 0.0, np.int32(t), np.int32(flood.STEP_PAD))
-        epochs = jnp.asarray(subcge.epoch_slots(stp, self.scfg))
+        epochs = jnp.asarray(subcge.epoch_slots(stp, self.scfg))  # sfcheck: noqa[SF010] -- epoch_replay=False above IS the PR 2 bug, kept as the A/B regression arm (DESIGN.md §8); the default path reaches here with inbox.steps untouched and tests pin the divergence across a τ boundary
         if self.cfg.batched_step:
             return self._replay_batched(stacked, jnp.asarray(sds),
                                         jnp.asarray(cfs), jnp.asarray(stp),

@@ -79,7 +79,7 @@ def resolve_backend(backend: str | None = None) -> str:
     """Map a knob value (or None = process default) to a concrete backend:
     one of ``"jnp" | "pallas" | "interpret"``."""
     if backend is None:
-        backend = _default_backend
+        backend = _default_backend  # sfcheck: noqa[SF002] -- the ONE sanctioned trace-time read (DESIGN.md §7/§8): backend choice is captured per trace by design, set_default_backend/default_backend document that live traces keep their backend; every per-run path passes the knob explicitly
     if backend not in KERNEL_BACKENDS:
         raise ValueError(f"kernel_backend must be one of {KERNEL_BACKENDS}, "
                          f"got {backend!r}")

@@ -1,0 +1,298 @@
+"""Unit tests for the sfcheck whole-program dataflow engine
+(`repro.analysis.dataflow`): module naming, cross-module name
+resolution, call-graph edges, the called-under-jit and donate-through
+fixpoints, local value-flow origins, and the CI output renderers.
+
+Everything runs on in-memory Projects — no filesystem, no jit."""
+import ast
+import json
+
+from repro.analysis.dataflow import module_name
+from repro.analysis.engine import (Diagnostic, Project, render_github,
+                                   sarif_report)
+
+
+def dataflow(sources):
+    return Project.from_sources(sources).dataflow()
+
+
+# ---------------------------------------------------------------------------
+# module naming / summaries
+# ---------------------------------------------------------------------------
+
+def test_module_name_strips_src_and_init():
+    assert module_name(("src", "repro", "core", "flood.py")) \
+        == "repro.core.flood"
+    assert module_name(("src", "repro", "serve", "__init__.py")) \
+        == "repro.serve"
+    assert module_name(("tests", "test_x.py")) == "tests.test_x"
+    assert module_name(("benchmarks", "bench_y.py")) == "benchmarks.bench_y"
+
+
+def test_function_qnames_are_module_qualified():
+    df = dataflow({"src/repro/core/m.py": (
+        "class C:\n"
+        "    def meth(self):\n"
+        "        pass\n"
+        "def top():\n"
+        "    def inner():\n"
+        "        pass\n")})
+    assert "repro.core.m.C.meth" in df.index
+    assert "repro.core.m.top" in df.index
+    assert "repro.core.m.top.inner" in df.index
+    top = df.index["repro.core.m.top"]
+    assert df.index["repro.core.m.top.inner"].parent is top
+
+
+def test_dataflow_is_built_once_and_cached():
+    project = Project.from_sources({"src/repro/core/m.py": "x = 1\n"})
+    assert project.dataflow() is project.dataflow()
+
+
+# ---------------------------------------------------------------------------
+# name resolution / call graph
+# ---------------------------------------------------------------------------
+
+def test_cross_module_import_edge():
+    df = dataflow({
+        "src/repro/core/a.py": ("from repro.core.b import helper\n"
+                                "def f(x):\n"
+                                "    return helper(x)\n"),
+        "src/repro/core/b.py": ("def helper(x):\n"
+                                "    return x\n"),
+    })
+    f = df.index["repro.core.a.f"]
+    assert [t.qname for _, t in f.edges] == ["repro.core.b.helper"]
+
+
+def test_module_alias_import_edge():
+    df = dataflow({
+        "src/repro/core/a.py": ("from repro.core import b\n"
+                                "def f(x):\n"
+                                "    return b.helper(x)\n"),
+        "src/repro/core/b.py": ("def helper(x):\n"
+                                "    return x\n"),
+    })
+    f = df.index["repro.core.a.f"]
+    assert [t.qname for _, t in f.edges] == ["repro.core.b.helper"]
+
+
+def test_self_method_and_base_class_resolution():
+    df = dataflow({"src/repro/core/m.py": (
+        "class Base:\n"
+        "    def shared(self):\n"
+        "        pass\n"
+        "class Sub(Base):\n"
+        "    def go(self):\n"
+        "        self.shared()\n")})
+    go = df.index["repro.core.m.Sub.go"]
+    assert [t.qname for _, t in go.edges] == ["repro.core.m.Base.shared"]
+
+
+def test_unresolvable_call_contributes_no_edge():
+    df = dataflow({"src/repro/core/m.py": (
+        "def f(obj):\n"
+        "    return obj.anything(1)\n")})
+    assert df.index["repro.core.m.f"].edges == []
+
+
+# ---------------------------------------------------------------------------
+# called-under-jit fixpoint
+# ---------------------------------------------------------------------------
+
+def test_traced_fixpoint_is_transitive_across_modules():
+    df = dataflow({
+        "src/repro/core/a.py": ("import jax\n"
+                                "from repro.core.b import mid\n"
+                                "@jax.jit\n"
+                                "def f(x):\n"
+                                "    return mid(x)\n"),
+        "src/repro/core/b.py": ("from repro.core.c import leaf\n"
+                                "def mid(x):\n"
+                                "    return leaf(x)\n"),
+        "src/repro/core/c.py": ("def leaf(x):\n"
+                                "    return x\n"
+                                "def unrelated(x):\n"
+                                "    return x\n"),
+    })
+    assert "repro.core.a.f" in df.traced
+    assert "repro.core.b.mid" in df.traced
+    assert "repro.core.c.leaf" in df.traced
+    assert "repro.core.c.unrelated" not in df.traced
+
+
+def test_wrap_form_makes_a_traced_root():
+    df = dataflow({"src/repro/core/m.py": (
+        "import jax\n"
+        "def f(x):\n"
+        "    return x\n"
+        "g = jax.jit(f, static_argnums=())\n")})
+    assert "repro.core.m.f" in df.traced
+
+
+def test_vmap_ref_edge_traces_the_referenced_function():
+    # bare-name references as call arguments (jax.vmap(one)) count
+    df = dataflow({"src/repro/core/m.py": (
+        "import jax\n"
+        "def one(x):\n"
+        "    return x\n"
+        "@jax.jit\n"
+        "def f(xs):\n"
+        "    return jax.vmap(one)(xs)\n")})
+    assert "repro.core.m.one" in df.traced
+
+
+def test_nested_defs_of_traced_functions_are_traced():
+    df = dataflow({"src/repro/core/m.py": (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    def inner(y):\n"
+        "        return y\n"
+        "    return inner(x)\n")})
+    assert "repro.core.m.f.inner" in df.traced
+
+
+# ---------------------------------------------------------------------------
+# donation facts
+# ---------------------------------------------------------------------------
+
+def test_decorator_donation_positions():
+    df = dataflow({"src/repro/core/m.py": (
+        "import functools\n"
+        "import jax\n"
+        "@functools.partial(jax.jit, donate_argnums=(0, 2))\n"
+        "def upd(p, g, buf):\n"
+        "    return p\n")})
+    assert df.index["repro.core.m.upd"].donated() == (0, 2)
+
+
+def test_wrap_and_attr_alias_donation():
+    df = dataflow({"src/repro/core/m.py": (
+        "import jax\n"
+        "def raw(p, g):\n"
+        "    return p\n"
+        "class M:\n"
+        "    def init(self):\n"
+        "        self._upd = jax.jit(raw, donate_argnums=(0,))\n")})
+    assert df.index["repro.core.m.raw"].donated() == (0,)
+    # self._upd resolves to raw through the attribute-alias map
+    m_cls = df.project.class_index()["M"][0][1]
+    fsum = df.file_summaries()[0]
+    assert df.resolve_method(fsum, m_cls, "_upd").qname == "repro.core.m.raw"
+
+
+def test_donate_through_fixpoint():
+    df = dataflow({"src/repro/core/m.py": (
+        "import functools\n"
+        "import jax\n"
+        "@functools.partial(jax.jit, donate_argnums=(0,))\n"
+        "def upd(p, g):\n"
+        "    return p\n"
+        "def middle(buf, g):\n"
+        "    return upd(buf, g)\n"
+        "def outer(b, g):\n"
+        "    return middle(b, g)\n")})
+    assert df.index["repro.core.m.middle"].donated() == (0,)
+    assert df.index["repro.core.m.outer"].donated() == (0,)
+
+
+# ---------------------------------------------------------------------------
+# local value flows
+# ---------------------------------------------------------------------------
+
+def _flows_of(src):
+    df = dataflow({"src/repro/core/m.py": src})
+    fi = df.file_summaries()[0].functions[0]
+    return df.flows(fi), fi
+
+
+def _origins(flows, fi):
+    ret = [n for n in ast.walk(fi.node) if isinstance(n, ast.Return)][-1]
+    return flows.origins(ret.value)
+
+
+def test_localflows_param_and_attr_origins():
+    flows, fi = _flows_of("def f(steps, inbox):\n"
+                          "    x = steps\n"
+                          "    y = inbox.coefs\n"
+                          "    return (x, y)\n")
+    labels = {(o.kind, o.label) for o in _origins(flows, fi)}
+    assert ("param", "steps") in labels
+    assert ("attr", "coefs") in labels
+
+
+def test_localflows_substitution_tagging():
+    flows, fi = _flows_of("import numpy as np\n"
+                          "def f(t, PAD):\n"
+                          "    stp = np.where(t > 0, np.int32(t), PAD)\n"
+                          "    return stp\n")
+    origins = _origins(flows, fi)
+    by_label = {o.label: o for o in origins}
+    assert by_label["t"].subst is True
+    assert by_label["PAD"].subst is True
+
+
+def test_localflows_wrapper_calls_keep_origins_untagged():
+    flows, fi = _flows_of("import numpy as np\n"
+                          "def f(steps):\n"
+                          "    x = np.asarray(steps).astype(np.int32)\n"
+                          "    return x\n")
+    origins = _origins(flows, fi)
+    assert {(o.label, o.subst) for o in origins} == {("steps", False)}
+
+
+def test_localflows_subscript_store_merges_origins():
+    flows, fi = _flows_of("import numpy as np\n"
+                          "def f(sts, K, PAD):\n"
+                          "    buf = np.full(K, PAD)\n"
+                          "    buf[:2] = sts\n"
+                          "    return buf\n")
+    labels = {o.label for o in _origins(flows, fi)}
+    assert "sts" in labels          # live slots carry the payload steps
+    assert "PAD" in labels          # fill value (tagged subst)
+
+
+# ---------------------------------------------------------------------------
+# output renderers
+# ---------------------------------------------------------------------------
+
+_DIAG = Diagnostic("SF007", "src/repro/serve/server.py", 12, 5,
+                   "jit inside a loop: 100% recompiles")
+
+
+def test_github_renderer_escapes_and_locates():
+    [line] = render_github([_DIAG])
+    assert line.startswith("::error file=src/repro/serve/server.py,"
+                           "line=12,col=5,title=sfcheck SF007::")
+    assert "100%25 recompiles" in line      # % must be %25-escaped
+
+
+def test_sarif_report_shape():
+    report = sarif_report([_DIAG])
+    assert report["version"] == "2.1.0"
+    run = report["runs"][0]
+    rule_ids = [r["id"] for r in run["tool"]["driver"]["rules"]]
+    assert "SF007" in rule_ids and "SF000" in rule_ids
+    [result] = run["results"]
+    assert result["ruleId"] == "SF007"
+    loc = result["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "src/repro/serve/server.py"
+    assert loc["region"] == {"startLine": 12, "startColumn": 5}
+    json.dumps(report)                      # must be valid JSON end-to-end
+
+
+def test_cli_format_flags(tmp_path, capsys):
+    from repro.analysis.engine import main
+    bad = tmp_path / "src" / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import numpy as np\nnp.random.seed(0)\n")
+    out = tmp_path / "report.sarif"
+    rc = main([str(bad), "--format", "sarif", "--output", str(out)])
+    assert rc == 1
+    report = json.loads(out.read_text())
+    assert [r["ruleId"] for r in report["runs"][0]["results"]] == ["SF001"]
+    rc = main([str(bad), "--format", "github"])
+    assert rc == 1
+    captured = capsys.readouterr()
+    assert "::error file=" in captured.out

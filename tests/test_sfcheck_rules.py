@@ -353,6 +353,459 @@ def test_sf006_inside_kernels_is_clean():
 
 
 # ---------------------------------------------------------------------------
+# SF002 interprocedural (the whole-program traced set)
+# ---------------------------------------------------------------------------
+
+def test_sf002_transitive_backend_sniffing_fires():
+    # the PR 4 bug class: the jit decorator sits in one module, the
+    # mutable-global read hides in a helper module — only the project
+    # call graph connects them
+    sources = {
+        "src/repro/core/hot.py": (
+            "import jax\n"
+            "from repro.core.backends import resolve\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return resolve(x)\n"),
+        "src/repro/core/backends.py": (
+            "_default_backend = 'auto'\n"
+            "def set_backend(b):\n"
+            "    global _default_backend\n"
+            "    _default_backend = b\n"
+            "def resolve(x):\n"
+            "    if _default_backend == 'neg':\n"
+            "        return -x\n"
+            "    return x\n"),
+    }
+    ds = diags(sources)
+    assert [(d.code, d.path) for d in ds] \
+        == [("SF002", "src/repro/core/backends.py")]
+
+
+def test_sf002_transitive_through_two_hops_fires():
+    sources = {
+        "src/repro/core/a.py": (
+            "import jax\n"
+            "from repro.core.b import mid\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return mid(x)\n"),
+        "src/repro/core/b.py": (
+            "from repro.core.c import leaf\n"
+            "def mid(x):\n"
+            "    return leaf(x)\n"),
+        "src/repro/core/c.py": (
+            "import time\n"
+            "def leaf(x):\n"
+            "    return x * time.time()\n"),
+    }
+    ds = diags(sources)
+    assert [(d.code, d.path) for d in ds] \
+        == [("SF002", "src/repro/core/c.py")]
+
+
+def test_sf002_untraced_helper_is_clean():
+    # same helper, but nothing jit-traces the caller: no finding
+    sources = {
+        "src/repro/core/a.py": (
+            "from repro.core.b import mid\n"
+            "def f(x):\n"
+            "    return mid(x)\n"),
+        "src/repro/core/b.py": (
+            "import time\n"
+            "def mid(x):\n"
+            "    return x * time.time()\n"),
+    }
+    assert diags(sources) == []
+
+
+# ---------------------------------------------------------------------------
+# SF007 retrace hazards
+# ---------------------------------------------------------------------------
+
+def test_sf007_jit_in_loop_fires():
+    # the PR 9 bug: a fresh jit wrapper per decode step recompiles the
+    # forward pass per token
+    src = ("import jax\n"
+           "def serve(fn, toks):\n"
+           "    out = []\n"
+           "    for t in toks:\n"
+           "        step = jax.jit(fn)\n"
+           "        out.append(step(t))\n"
+           "    return out\n")
+    assert codes(src) == ["SF007"]
+
+
+def test_sf007_immediately_invoked_jit_fires():
+    src = ("import jax\n"
+           "def f(x):\n"
+           "    return x\n"
+           "def g(x):\n"
+           "    return jax.jit(f)(x)\n")
+    assert codes(src) == ["SF007"]
+
+
+def test_sf007_hoisted_jit_is_clean():
+    src = ("import jax\n"
+           "def serve(fn, toks):\n"
+           "    step = jax.jit(fn)\n"
+           "    return [step(t) for t in toks]\n")
+    assert diags(src) == []
+
+
+def test_sf007_keyed_cache_in_loop_is_clean():
+    # the sanctioned idiom: programs stored under a shape key
+    src = ("import jax\n"
+           "def serve(fn, work, fns):\n"
+           "    for t, key in work:\n"
+           "        f = fns.get(key)\n"
+           "        if f is None:\n"
+           "            f = jax.jit(fn)\n"
+           "            fns[key] = f\n"
+           "        f(t)\n")
+    assert diags(src) == []
+
+
+def test_sf007_loop_var_in_jit_args_is_clean():
+    # per-K programs in a benchmark sweep are per-K on purpose
+    src = ("import jax\n"
+           "def sweep(make, ks):\n"
+           "    for K in ks:\n"
+           "        f = jax.jit(make(K))\n"
+           "        f()\n")
+    assert diags(src) == []
+
+
+def test_sf007_callee_rebuilt_in_loop_is_clean():
+    src = ("import jax\n"
+           "def sweep(modes, x):\n"
+           "    for mode in modes:\n"
+           "        def fn(v):\n"
+           "            return v\n"
+           "        j = jax.jit(fn)\n"
+           "        j(x)\n")
+    assert diags(src) == []
+
+
+def test_sf007_factory_called_in_loop_fires():
+    # the interprocedural PR 9 shape: the jit construction hides in a
+    # factory; the loop call site is where the recompiles happen
+    src = ("import jax\n"
+           "def make_step(f):\n"
+           "    return jax.jit(f)\n"
+           "def run(f, xs):\n"
+           "    for x in xs:\n"
+           "        s = make_step(f)\n"
+           "        s(x)\n")
+    assert codes(src) == ["SF007"]
+
+
+def test_sf007_factory_with_loop_var_arg_is_clean():
+    src = ("import jax\n"
+           "def make_step(k):\n"
+           "    return jax.jit(lambda x: x * k)\n"
+           "def run(ks, x):\n"
+           "    for k in ks:\n"
+           "        make_step(k)(x)\n")
+    assert diags(src) == []
+
+
+def test_sf007_factory_called_once_is_clean():
+    src = ("import jax\n"
+           "def make_step(f):\n"
+           "    return jax.jit(f)\n"
+           "def run(f, xs):\n"
+           "    s = make_step(f)\n"
+           "    return [s(x) for x in xs]\n")
+    assert diags(src) == []
+
+
+def test_sf007_jit_lambda_over_rebound_global_fires():
+    src = ("import jax\n"
+           "_mode = 'a'\n"
+           "def set_mode(m):\n"
+           "    global _mode\n"
+           "    _mode = m\n"
+           "j = jax.jit(lambda x: x if _mode == 'a' else -x)\n")
+    assert codes(src) == ["SF007"]
+
+
+# ---------------------------------------------------------------------------
+# SF008 donation safety
+# ---------------------------------------------------------------------------
+
+_DONATING = ("import functools\n"
+             "import jax\n"
+             "@functools.partial(jax.jit, donate_argnums=(0,))\n"
+             "def upd(p, g):\n"
+             "    return p\n")
+
+
+def test_sf008_use_after_donate_fires():
+    src = _DONATING + ("def step(p, g):\n"
+                       "    q = upd(p, g)\n"
+                       "    return p + q\n")
+    assert codes(src) == ["SF008"]
+
+
+def test_sf008_rebind_is_clean():
+    src = _DONATING + ("def step(p, g):\n"
+                       "    p = upd(p, g)\n"
+                       "    return p\n")
+    assert diags(src) == []
+
+
+def test_sf008_branch_return_is_clean():
+    # the seedflood shape: the donating call returns out of the branch,
+    # so the fall-through read is on a different path
+    src = _DONATING + ("def step(p, g, fused):\n"
+                       "    if fused:\n"
+                       "        return upd(p, g)\n"
+                       "    return p * 2\n")
+    assert diags(src) == []
+
+
+def test_sf008_loop_carried_donation_fires():
+    # donated in iteration i, passed in again in iteration i+1
+    src = _DONATING + ("def run(p, gs):\n"
+                       "    for g in gs:\n"
+                       "        upd(p, g)\n")
+    assert codes(src) == ["SF008"]
+
+
+def test_sf008_loop_rebind_is_clean():
+    src = _DONATING + ("def run(p, gs):\n"
+                       "    for g in gs:\n"
+                       "        p = upd(p, g)\n"
+                       "    return p\n")
+    assert diags(src) == []
+
+
+def test_sf008_donate_through_callee_fires():
+    # interprocedural: middle() forwards its param into the donated
+    # position, so outer's buffer dies at the middle() call
+    src = _DONATING + ("def middle(buf, g):\n"
+                       "    return upd(buf, g)\n"
+                       "def outer(p, g):\n"
+                       "    middle(p, g)\n"
+                       "    return p.sum()\n")
+    assert codes(src) == ["SF008"]
+
+
+def test_sf008_wrap_form_donation_fires():
+    src = ("import jax\n"
+           "def f(p, g):\n"
+           "    return p\n"
+           "upd = jax.jit(f, donate_argnums=(0,))\n"
+           "def step(p, g):\n"
+           "    q = upd(p, g)\n"
+           "    return p - q\n")
+    assert codes(src) == ["SF008"]
+
+
+def test_sf008_non_donating_call_is_clean():
+    src = ("import jax\n"
+           "@jax.jit\n"
+           "def upd(p, g):\n"
+           "    return p\n"
+           "def step(p, g):\n"
+           "    q = upd(p, g)\n"
+           "    return p + q\n")
+    assert diags(src) == []
+
+
+# ---------------------------------------------------------------------------
+# SF009 jit-cache-key completeness
+# ---------------------------------------------------------------------------
+
+_SERVE = "src/repro/serve/server.py"
+
+
+def test_sf009_key_missing_factory_param_fires():
+    src = ("import jax\n"
+           "class Srv:\n"
+           "    def __init__(self):\n"
+           "        self._fns = {}\n"
+           "    def _fn(self, Bg, T):\n"
+           "        fn = self._fns.get((Bg,))\n"
+           "        if fn is None:\n"
+           "            def prefill(x):\n"
+           "                return x\n"
+           "            fn = jax.jit(prefill)\n"
+           "            self._fns[(Bg,)] = fn\n"
+           "        return fn\n")
+    ds = diags(src, rel=_SERVE)
+    assert [d.code for d in ds] == ["SF009"]
+    assert "'T'" in ds[0].message
+
+
+def test_sf009_complete_key_is_clean():
+    src = ("import jax\n"
+           "class Srv:\n"
+           "    def __init__(self):\n"
+           "        self._fns = {}\n"
+           "    def _fn(self, Bg, T):\n"
+           "        fn = self._fns.get((Bg, T))\n"
+           "        if fn is None:\n"
+           "            def prefill(x):\n"
+           "                return x\n"
+           "            fn = jax.jit(prefill)\n"
+           "            self._fns[(Bg, T)] = fn\n"
+           "        return fn\n")
+    assert diags(src, rel=_SERVE) == []
+
+
+def test_sf009_mutable_attr_in_closure_fires():
+    # a cache hit replays a program compiled against the OLD self.scale
+    src = ("import jax\n"
+           "class Srv:\n"
+           "    def __init__(self, scale):\n"
+           "        self._fns = {}\n"
+           "        self.scale = scale\n"
+           "    def bump(self):\n"
+           "        self.scale = self.scale + 1\n"
+           "    def _fn(self, T):\n"
+           "        fn = self._fns.get((T,))\n"
+           "        if fn is None:\n"
+           "            def f(x):\n"
+           "                return x * self.scale\n"
+           "            fn = jax.jit(f)\n"
+           "            self._fns[(T,)] = fn\n"
+           "        return fn\n")
+    ds = diags(src, rel=_SERVE)
+    assert [d.code for d in ds] == ["SF009"]
+    assert "self.scale" in ds[0].message
+
+
+def test_sf009_init_constant_attr_is_clean():
+    src = ("import jax\n"
+           "class Srv:\n"
+           "    def __init__(self, meta):\n"
+           "        self._fns = {}\n"
+           "        self.meta = meta\n"
+           "    def _fn(self, T):\n"
+           "        fn = self._fns.get((T,))\n"
+           "        if fn is None:\n"
+           "            def f(x):\n"
+           "                return x * self.meta\n"
+           "            fn = jax.jit(f)\n"
+           "            self._fns[(T,)] = fn\n"
+           "        return fn\n")
+    assert diags(src, rel=_SERVE) == []
+
+
+def test_sf009_out_of_scope_is_silent():
+    src = ("import jax\n"
+           "class Srv:\n"
+           "    def __init__(self):\n"
+           "        self._fns = {}\n"
+           "    def _fn(self, Bg, T):\n"
+           "        fn = jax.jit(lambda x: x)\n"
+           "        self._fns[(Bg,)] = fn\n"
+           "        return fn\n")
+    assert diags(src) == []          # default rel is core/: not a cache dir
+
+
+# ---------------------------------------------------------------------------
+# SF010 sender-step epoch flow
+# ---------------------------------------------------------------------------
+
+_DTRAIN = "src/repro/dtrain/methods/newmethod.py"
+
+
+def test_sf010_receiver_step_substitution_fires():
+    # the PR 2 bug, verbatim shape: payload steps overwritten with the
+    # receiver's current step before the epoch computation
+    src = ("import numpy as np\n"
+           "from repro.core import flood, subcge\n"
+           "def apply_inbox(inbox, scfg, t):\n"
+           "    stp = np.where(inbox.coefs != 0.0, np.int32(t),\n"
+           "                   np.int32(flood.STEP_PAD))\n"
+           "    return subcge.epoch_slots(stp, scfg)\n")
+    ds = diags(src, rel=_DTRAIN)
+    assert [d.code for d in ds] == ["SF010"]
+    assert "'t'" in ds[0].message
+
+
+def test_sf010_payload_steps_passthrough_is_clean():
+    src = ("from repro.core import subcge\n"
+           "def apply_inbox(inbox, scfg):\n"
+           "    return subcge.epoch_slots(inbox.steps, scfg)\n")
+    assert diags(src, rel=_DTRAIN) == []
+
+
+def test_sf010_padded_steps_buffer_is_clean():
+    # the gossip_sr/bridge shape: a PAD-filled buffer whose live slots
+    # carry the payload's sender steps
+    src = ("import numpy as np\n"
+           "from repro.core import flood, subcge\n"
+           "def fold(sts, n, K, scfg):\n"
+           "    pad_t = np.full(K, flood.STEP_PAD, np.int32)\n"
+           "    pad_t[:n] = sts\n"
+           "    return subcge.epoch_slots(pad_t, scfg)\n")
+    assert diags(src, rel=_DTRAIN) == []
+
+
+def test_sf010_no_step_origin_fires():
+    src = ("import numpy as np\n"
+           "from repro.core import subcge\n"
+           "def apply_inbox(inbox, scfg, t):\n"
+           "    return subcge.epoch_slots(np.int32(t), scfg)\n")
+    ds = diags(src, rel=_DTRAIN)
+    assert [d.code for d in ds] == ["SF010"]
+    assert "no step-data origin" in ds[0].message
+
+
+def test_sf010_dropped_payload_steps_fires():
+    src = ("def ingest(inbox):\n"
+           "    s = inbox.seeds\n"
+           "    c = inbox.coefs\n"
+           "    return s, c\n")
+    ds = diags(src, rel=_DTRAIN)
+    assert [d.code for d in ds] == ["SF010"]
+    assert ".steps" in ds[0].message
+
+
+def test_sf010_consumed_payload_steps_is_clean():
+    src = ("def ingest(inbox):\n"
+           "    return inbox.seeds, inbox.coefs, inbox.steps\n")
+    assert diags(src, rel=_DTRAIN) == []
+
+
+def test_sf010_epochless_replay_with_steps_in_hand_fires():
+    src = ("from repro.core import subcge\n"
+           "def replay(p, meta, cfg, sub, inbox):\n"
+           "    sds = inbox.seeds\n"
+           "    cfs = inbox.coefs\n"
+           "    stp = inbox.steps\n"
+           "    return subcge.apply_messages(p, meta, cfg, sub, sds, cfs)\n")
+    ds = diags(src, rel=_DTRAIN)
+    assert [d.code for d in ds] == ["SF010"]
+    assert "apply_messages_epoch" in ds[0].message
+
+
+def test_sf010_epoch_aware_replay_is_clean():
+    src = ("from repro.core import subcge\n"
+           "def replay(p, meta, cfg, seed, inbox, epochs):\n"
+           "    return subcge.apply_messages_epoch(\n"
+           "        p, meta, cfg, seed, inbox.seeds, inbox.coefs,\n"
+           "        inbox.steps, epochs)\n")
+    assert diags(src, rel=_DTRAIN) == []
+
+
+def test_sf010_out_of_scope_is_silent():
+    # core/ itself defines the substitution-free primitives; the rule
+    # polices the *consumers* in dtrain//sim//serve
+    src = ("import numpy as np\n"
+           "from repro.core import flood, subcge\n"
+           "def apply_inbox(inbox, scfg, t):\n"
+           "    stp = np.where(inbox.coefs != 0.0, np.int32(t),\n"
+           "                   np.int32(flood.STEP_PAD))\n"
+           "    return subcge.epoch_slots(stp, scfg)\n")
+    assert diags(src) == []
+
+
+# ---------------------------------------------------------------------------
 # SF000 suppressions
 # ---------------------------------------------------------------------------
 
@@ -406,5 +859,6 @@ def test_select_filters_rules():
 def test_rule_catalogue_is_complete():
     from repro.analysis.rules import RULES
     assert [r.code for r in RULES] == [
-        "SF001", "SF002", "SF003", "SF004", "SF005", "SF006"]
+        "SF001", "SF002", "SF003", "SF004", "SF005", "SF006",
+        "SF007", "SF008", "SF009", "SF010"]
     assert all(r.summary for r in RULES)
